@@ -1,0 +1,270 @@
+"""Assemble EXPERIMENTS.md from results/ artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+
+Sections: §Repro-T2/T3/T4, §Repro-F7/F8, §Repro-LM, §Dry-run, §Roofline,
+§Perf (hillclimb logs are curated inline here; measurements pulled from
+results/perf/*.json).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+R = pathlib.Path("results")
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def _load(p):
+    f = R / p
+    return json.loads(f.read_text()) if f.exists() else None
+
+
+def terms(r):
+    hs, c = r["hlo_stats"], r["collectives"]
+    return (hs["flops_per_device"] / PEAK,
+            hs["bytes_traffic_per_device"] / HBM,
+            c["per_chip_bytes"] / LINK)
+
+
+def sec_repro():
+    out = ["## §Repro — faithful reproduction (synthetic substrate)",
+           "",
+           "Offline substrate: CIFAR-class synthetic images (DESIGN.md §3); "
+           "the paper's *relative* claims are the validation target. "
+           "F=full precision, N=uniform 5-bit, L=layer-level flat DDPG "
+           "(HAQ-like), C=kernel-wise hierarchical DRL (AutoQ). "
+           "rc=resource-constrained (Algorithm 1, target 5 bits), "
+           "ag=accuracy-guaranteed. 250 episodes/search; top1_ft = after "
+           "QAT fine-tuning (60 steps)."]
+    for name, title in (("table2_quant", "§Repro-T2 — network quantization "
+                         "(paper Table 2)"),
+                        ("table3_binarize", "§Repro-T3 — network "
+                         "binarization (paper Table 3)")):
+        d = _load(f"repro/{name}.json")
+        if not d:
+            continue
+        out += ["", f"### {title}", "",
+                "| scheme | proto | top-1 % | top-1 ft % | act bits | "
+                "wei bits | logic ratio |",
+                "|---|---|---|---|---|---|---|"]
+        for r in d["rows"]:
+            ft = r.get("top1_ft")
+            out.append(
+                f"| {r['scheme']} | {r['protocol']} | {r['top1']:.2f} | "
+                f"{ft if ft is None else f'{ft:.2f}'} | "
+                f"{r['act_bits']:.2f} | {r['wei_bits']:.2f} | "
+                f"{r['logic_ratio']:.4f} |")
+    d = _load("repro/table4_compare.json")
+    if d:
+        a, h = d["autoq_channel"], d["haq_like_layer"]
+        out += ["", "### §Repro-T4 — cost at iso-accuracy vs layer-level "
+                "DDPG (paper Table 4)", "",
+                "| scheme | Δtop-1 (pp) | norm. logic |", "|---|---|---|",
+                f"| AutoQ kernel-wise (C/ag) | {a['d_top1']:+.2f} | "
+                f"{a['norm_logic']:.4f} |",
+                f"| HAQ-like layer-level (L/ag) | {h['d_top1']:+.2f} | "
+                f"{h['norm_logic']:.4f} |"]
+    d = _load("repro/fig8_convergence.json")
+    if d:
+        hi, fl = d["hierarchical"], d["flat_ddpg"]
+
+        def milestones(curve):
+            best = 0.0
+            ms = []
+            for i, a in enumerate(curve):
+                best = max(best, a)
+                if i in (24, 49, 99, 149, len(curve) - 1):
+                    ms.append(f"ep{i+1}:{best:.0f}%")
+            return " ".join(ms)
+        out += ["", "### §Repro-F8 — hierarchical vs flat DDPG convergence "
+                "(paper Fig. 8)", "",
+                f"- hierarchical best-so-far acc: {milestones(hi['acc_curve'])}"
+                f" (best {hi['best_acc']:.1f}%)",
+                f"- flat channel DDPG:            {milestones(fl['acc_curve'])}"
+                f" (best {fl['best_acc']:.1f}%)"]
+    d = _load("repro/fig7_flop_reward.json")
+    if d:
+        out += ["", "### §Repro-F7 — NetScore vs FLOP-based reward "
+                "(paper §4.3 / Fig. 7)", "",
+                "| reward | fc-layer weight bits | acc % | logic ratio |",
+                "|---|---|---|---|"]
+        for k in ("netscore", "flop"):
+            r = d[k]
+            out.append(f"| {k} | {r['fc_wbits']:.2f} | {r['acc']:.1f} | "
+                       f"{r['logic_ratio']:.4f} |")
+        gap = d["flop"]["fc_wbits"] - d["netscore"]["fc_wbits"]
+        if gap > 0.5:
+            out += ["", "The FLOP reward keeps the FC layer's weights fat "
+                    "(no logic incentive there), reproducing the paper's "
+                    "section 4.3 observation."]
+        else:
+            out += ["", "Caveat: the paper's section 4.3 effect (FLOP "
+                    "reward keeps FC weights fat) did **not** manifest "
+                    f"(gap {gap:+.1f} bits) -- our substrate CNN's FC layer "
+                    "is only ~330 weights, too small for the weight-count "
+                    "term to bite; the paper's ResNet-18 FC has 512k. "
+                    "Reported as-is."]
+    rows = []
+    for f in ("lm_phi4", "lm_mamba2"):
+        d = _load(f"repro/{f}.json")
+        if d:
+            rows.append(d)
+    if rows:
+        out += ["", "### §Repro-LM — kernel-wise search on assigned-family "
+                "LMs (beyond paper)", "",
+                "| arch (smoke) | full acc % | uniform-5b acc % | searched "
+                "acc % | avg w bits | avg a bits |", "|---|---|---|---|---|---|"]
+        for d in rows:
+            out.append(f"| {d['arch']} | {d['full_acc']:.1f} | "
+                       f"{d['uniform5_acc']:.1f} | {d['searched_acc']:.1f} | "
+                       f"{d['avg_wbits']:.2f} | {d['avg_abits']:.2f} |")
+    return out
+
+
+def sec_dryrun():
+    rows = []
+    for f in sorted((R / "dryrun").glob("*.json")):
+        rows.append(json.loads(f.read_text()))
+    ok = [r for r in rows if r["status"] == "ok"]
+    skip = [r for r in rows if r["status"] == "skip"]
+    out = ["", "## §Dry-run — multi-pod lower + compile (deliverable e)", "",
+           f"{len(ok)} cells compile OK ({len([r for r in ok if r['mesh']=='single'])} "
+           f"single-pod 16x16=256 chips, {len([r for r in ok if r['mesh']=='multi'])} "
+           f"multi-pod 2x16x16=512 chips); {len(skip)} documented skips "
+           "(long_500k on pure full-attention archs, DESIGN.md §4).", "",
+           "| arch | shape | mesh | compile s | HLO GFLOPs/dev | traffic "
+           "GB/dev | coll GB/chip | temp GB/dev |", "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        hs, c = r["hlo_stats"], r["collectives"]
+        ma = r.get("memory_analysis", {})
+        temp = ma.get("temp_size_in_bytes", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f} | {hs['flops_per_device']/1e9:.1f} | "
+            f"{hs['bytes_traffic_per_device']/1e9:.1f} | "
+            f"{c['per_chip_bytes']/1e9:.1f} | {temp:.1f} |")
+    out += ["", "Skipped cells:"]
+    seen = set()
+    for r in skip:
+        key = (r["arch"], r["shape"])
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f"- {r['arch']} x {r['shape']}: {r.get('reason','')}")
+
+    # HBM-fit note: argument bytes (params + opt state + caches) are exact;
+    # temp bytes come from the CPU backend and inflate like the traffic
+    # numbers (f32 dot upcasts, double-buffered scan carries, unfused
+    # attention workspaces).
+    args_max = max((r.get("memory_analysis", {})
+                    .get("argument_size_in_bytes", 0) for r in ok),
+                   default=0) / 1e9
+    over = [(r["arch"], r["shape"],
+             r["memory_analysis"].get("temp_size_in_bytes", 0) / 1e9)
+            for r in ok if r["mesh"] == "single" and
+            r.get("memory_analysis", {}).get("temp_size_in_bytes", 0) / 1e9 +
+            r.get("memory_analysis", {}).get("argument_size_in_bytes", 0) /
+            1e9 > 16.0]
+    out += ["",
+            f"**HBM fit (v5e, 16 GB/chip)**: resident state (params + "
+            f"8-bit Adam moments + caches) fits everywhere -- max argument "
+            f"bytes {args_max:.1f} GB/device (jamba-398B train; the int8 "
+            f"optimizer-state win).  {len(over)} cells report CPU-backend "
+            "temp sizes above 16 GB; these are upper bounds inflated by "
+            "the same CPU artifacts corrected in the traffic analysis "
+            "(f32 dot upcasts ~2x, double-buffered scan carries, unfused "
+            "attention workspaces that live in VMEM on TPU).  The "
+            "remat-over-repeats policy bounds true activation residency to "
+            "one pattern period; closing the remaining gap on TPU is the "
+            "flash-attention/dispatch Pallas work noted in DESIGN.md "
+            "section 6b."]
+    return out
+
+
+def sec_roofline():
+    rl = _load("roofline.json")
+    if not rl:
+        return []
+    out = ["", "## §Roofline — three-term analysis per (arch x shape), "
+           "single-pod 256 chips (deliverable g)", "",
+           "Terms (seconds/step): compute = HLO_FLOPs/dev / 197 TFLOP/s; "
+           "memory = HBM traffic/dev / 819 GB/s (fusion-granularity "
+           "reads+writes, in-place DUS, dequant chains charged at source "
+           "dtype); collective = ring-model link bytes / 50 GB/s. "
+           "HLO numbers are loop-corrected (launch/hlo.py) -- jax's "
+           "cost_analysis undercounts scan bodies by the trip count. "
+           "useful = MODEL_FLOPS / HLO_FLOPs_global, MODEL_FLOPS = "
+           "6·N_active·D (train) or 2·N_active·D (prefill/decode).", "",
+           "| arch | shape | compute s | memory s | collective s | dominant "
+           "| useful | what would move the dominant term |",
+           "|---|---|---|---|---|---|---|---|"]
+    for c in rl:
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute_s']:.2e} | "
+            f"{c['t_memory_s']:.2e} | {c['t_collective_s']:.2e} | "
+            f"**{c['dominant']}** | {c['useful_ratio']:.2f} | "
+            f"{c['advice']} |")
+    doms = {}
+    for c in rl:
+        doms[c["dominant"]] = doms.get(c["dominant"], 0) + 1
+    out += ["", f"Bottleneck census: {doms}.  Decode/prefill are "
+            "memory-bound -- exactly the term AutoQ's kernel-wise "
+            "bit-width policies shrink; train is collective-bound at this "
+            "mesh (FSDP gathers + TP reductions)."]
+    return out
+
+
+def _fmt_terms(r):
+    if r is None or r.get("status") != "ok":
+        return "(cell unavailable)"
+    tc, tm, tl = terms(r)
+    dom = max((("compute", tc), ("memory", tm), ("collective", tl)),
+              key=lambda kv: kv[1])
+    return (f"compute {tc:.3g}s / memory {tm:.3g}s / collective {tl:.3g}s "
+            f"(dominant: {dom[0]})")
+
+
+def _perf_section():
+    perf = pathlib.Path("EXPERIMENTS_PERF.md")
+    if not perf.exists():
+        return []
+    txt = perf.read_text()
+    subs = {
+        "PAIR_C_BASE": "dryrun/internlm2-20b__decode_32k__single.json",
+        "PAIR_C_H1": "perf/internlm2-20b__decode_32k__single__quant_serve.json",
+        "PAIR_C_H2": "perf/internlm2-20b__decode_32k__single__kv8+quant_serve.json",
+        "PAIR_C_H3": "perf/internlm2-20b__decode_32k__single__kv8.json",
+        "PAIR_A_BASE": "dryrun/jamba-1.5-large-398b__train_4k__single.json",
+        "PAIR_A_H3M": "perf/jamba-1.5-large-398b__train_4k__single__"
+                      "logits_sharded+remat_dots.json",
+        "PAIR_B_BASE": "dryrun/granite-moe-3b-a800m__train_4k__single.json",
+        "PAIR_B_H1": "perf/granite-moe-3b-a800m__train_4k__single__ep_pad.json",
+        "PAIR_B_H2": "perf/granite-moe-3b-a800m__train_4k__single__moe_local.json",
+        "PAIR_B_H3": "perf/granite-moe-3b-a800m__train_4k__single__remat_dots.json",
+    }
+    # multi-pod baseline for the compress_pod comparison
+    mb = _load("dryrun/jamba-1.5-large-398b__train_4k__multi.json")
+    if mb:
+        txt = txt.replace("PAIR_A_MULTI_BASE", _fmt_terms(mb))
+    for token, path in subs.items():
+        txt = txt.replace(token, _fmt_terms(_load(path)))
+    return ["", txt]
+
+
+def main():
+    parts = ["# EXPERIMENTS", "",
+             "All numbers produced by code in this repo; regenerate with "
+             "`python -m benchmarks.make_experiments_md`.  Hardware "
+             "constants: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, "
+             "~50 GB/s/link ICI; 256 chips/pod."]
+    parts += sec_repro()
+    parts += sec_dryrun()
+    parts += sec_roofline()
+    parts += _perf_section()
+    pathlib.Path("EXPERIMENTS.md").write_text("\n".join(parts) + "\n")
+    print(f"wrote EXPERIMENTS.md ({len(parts)} blocks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,270 @@
+"""Faithful-reproduction experiment driver (EXPERIMENTS.md §Repro-*).
+
+Re-creates the paper's tables/figures on the offline substrate (synthetic
+CIFAR-like data; see DESIGN.md §3 "assumptions changed"):
+
+  table2  -- network quantization:  F / N / L / C  x  {RC, AG}   (Table 2)
+  table3  -- network binarization:  same grid                     (Table 3)
+  fig8    -- hierarchical vs flat-channel DDPG convergence        (Fig. 8)
+  table4  -- cost-at-iso-accuracy vs layer-level (HAQ-like) DDPG  (Table 4)
+  fig7    -- NetScore- vs FLOP-based reward, last-layer bits      (Fig. 5/7)
+  lm      -- kernel-wise search on tiny LM configs (beyond-paper: the
+             assigned-architecture families)
+
+Run everything:   PYTHONPATH=src python -m benchmarks.repro_autoq --full
+Fast smoke (CI):  PYTHONPATH=src python -m benchmarks.repro_autoq
+Writes results/repro/<name>.json.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import (FlatAgent, HierarchicalAgent, LayerBounder, QuantEnv,
+                        RewardCfg, make_cnn_evaluator, make_lm_evaluator,
+                        run_search)
+from repro.core.ddpg import adam_init, adam_update
+from repro.data import SyntheticImages, TokenStream
+from repro.models import LM
+from repro.models.cnn import CNN, CIF10_TINY
+from repro.quant.policy import QuantMode, QuantPolicy
+from repro.train.qat import qat_finetune
+
+OUT = pathlib.Path("results/repro")
+DATA = SyntheticImages(img_size=16)
+
+
+# ----------------------------------------------------------------- substrate
+def train_substrate(steps=250):
+    model = CNN(CIF10_TINY)
+    params = model.init(jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p, o, b):
+        l, g = jax.value_and_grad(model.loss)(p, b)
+        p, o = adam_update(p, g, o, 2e-3)
+        return p, o, l
+
+    opt = adam_init(params)
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in DATA.batch(i, 128).items()}
+        params, opt, _ = step(params, opt, b)
+    val = DATA.batch(99_999, 512)
+    acc = float(model.accuracy(
+        params, {k: jnp.asarray(v) for k, v in val.items()})) * 100
+    return model, params, val, acc
+
+
+def _env(model, params, val, graph, mode, protocol, target_bits=5.0):
+    ev = make_cnn_evaluator(model, params, graph, val, mode=mode)
+    if protocol == "rc":
+        reward = RewardCfg.resource_constrained()
+        bounder = LayerBounder(graph, target_bits, target_bits)
+    elif protocol == "ag":
+        reward, bounder = RewardCfg.accuracy_guaranteed(), None
+    else:  # "flop" (section 4.3)
+        reward, bounder = RewardCfg.flop_based(), None
+    return QuantEnv(graph, params, ev, reward, mode=mode, bounder=bounder), ev
+
+
+def _finetuned_acc(model, params, graph, policy, val, mode, steps):
+    if steps == 0:
+        return None
+    tuned = qat_finetune(model, params, graph, policy,
+                         lambda i: DATA.batch(50_000 + i, 128), steps=steps)
+    ev = make_cnn_evaluator(model, tuned, graph, val, mode=mode)
+    return float(ev(policy))
+
+
+# ------------------------------------------------------------ tables 2 and 3
+def run_table(mode: QuantMode, model, params, val, full_acc,
+              episodes=(60, 190), qat_steps=60, seed=0):
+    graph = model.graph()
+    rows = []
+    t0 = time.time()
+    _, ev = _env(model, params, val, graph, mode, "ag")
+
+    rows.append({"scheme": "F", "protocol": "-", "top1": full_acc,
+                 "act_bits": 32.0, "wei_bits": 32.0, "logic_ratio": 1.0})
+    for protocol in ("rc", "ag"):
+        # N: empirical uniform policy (5-bit, the paper's baseline)
+        p5 = QuantPolicy.uniform(graph, 5.0, mode=mode)
+        rows.append({"scheme": "N", "protocol": protocol, "top1": ev(p5),
+                     "top1_ft": _finetuned_acc(model, params, graph, p5, val,
+                                               mode, qat_steps),
+                     "act_bits": 5.0, "wei_bits": 5.0,
+                     "logic_ratio": p5.logic_ops(graph) /
+                     (graph.total_macs * 1024)})
+        # L: layer-level flat DDPG (HAQ-like)
+        env, ev2 = _env(model, params, val, graph, mode, protocol)
+        agent = FlatAgent(env, seed=seed, granularity="layer")
+        res = run_search(agent, *episodes)
+        pl = res.best_policy
+        rows.append({"scheme": "L", "protocol": protocol,
+                     "top1": res.best_log.acc,
+                     "top1_ft": _finetuned_acc(model, params, graph, pl, val,
+                                               mode, qat_steps),
+                     "act_bits": res.best_log.avg_abits,
+                     "wei_bits": res.best_log.avg_wbits,
+                     "logic_ratio": res.best_log.logic_ratio,
+                     "episodes": sum(episodes), "wall_s": res.wall_s})
+        # C: kernel-wise hierarchical DRL (the paper)
+        env, ev2 = _env(model, params, val, graph, mode, protocol)
+        agent = HierarchicalAgent(env, seed=seed)
+        res = run_search(agent, *episodes)
+        pc = res.best_policy
+        rows.append({"scheme": "C", "protocol": protocol,
+                     "top1": res.best_log.acc,
+                     "top1_ft": _finetuned_acc(model, params, graph, pc, val,
+                                               mode, qat_steps),
+                     "act_bits": res.best_log.avg_abits,
+                     "wei_bits": res.best_log.avg_wbits,
+                     "logic_ratio": res.best_log.logic_ratio,
+                     "episodes": sum(episodes), "wall_s": res.wall_s,
+                     "per_layer_wbits": {
+                         l.name: float(np.mean(pc.weight_bits[l.name]))
+                         for l in graph.layers}})
+    return {"mode": mode.value, "full_acc": full_acc, "rows": rows,
+            "wall_s": time.time() - t0}
+
+
+# ------------------------------------------------------------------- figure 8
+def run_fig8(model, params, val, episodes=250, seed=0):
+    graph = model.graph()
+    out = {}
+    for name, mk in (("hierarchical",
+                      lambda e: HierarchicalAgent(e, seed=seed)),
+                     ("flat_ddpg",
+                      lambda e: FlatAgent(e, seed=seed,
+                                          granularity="channel"))):
+        env, _ = _env(model, params, val, graph, QuantMode.QUANT, "ag")
+        res = run_search(mk(env), n_explore=episodes // 4,
+                         n_exploit=episodes - episodes // 4)
+        out[name] = {"acc_curve": res.acc_curve(),
+                     "reward_curve": res.reward_curve(),
+                     "best_acc": res.best_log.acc, "wall_s": res.wall_s}
+    return out
+
+
+# ------------------------------------------------------------------- table 4
+def run_table4(t2):
+    """Cost at iso-accuracy: C (AutoQ) vs L (HAQ-like), from table2 rows."""
+    rows = {r["scheme"] + "/" + r["protocol"]: r for r in t2["rows"]}
+    c, l = rows.get("C/ag"), rows.get("L/ag")
+    return {
+        "autoq_channel": {"d_top1": c["top1_ft"] - t2["full_acc"],
+                          "norm_logic": c["logic_ratio"]},
+        "haq_like_layer": {"d_top1": l["top1_ft"] - t2["full_acc"],
+                           "norm_logic": l["logic_ratio"]},
+    }
+
+
+# ------------------------------------------------------------------- figure 7
+def run_fig7(model, params, val, episodes=(40, 120), seed=0):
+    """NetScore vs FLOP-based reward: the FLOP reward has no incentive to
+    shrink the FC layer's weights (paper section 4.3)."""
+    graph = model.graph()
+    out = {}
+    for name, protocol in (("netscore", "ag"), ("flop", "flop")):
+        env, _ = _env(model, params, val, graph, QuantMode.QUANT, protocol)
+        agent = HierarchicalAgent(env, seed=seed)
+        res = run_search(agent, *episodes)
+        p = res.best_policy
+        out[name] = {
+            "per_layer_wbits": {l.name: float(np.mean(p.weight_bits[l.name]))
+                                for l in graph.layers},
+            "fc_wbits": float(np.mean(p.weight_bits["fc"])),
+            "acc": res.best_log.acc,
+            "logic_ratio": res.best_log.logic_ratio,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------- LMs
+def run_lm(arch_id="phi4-mini-3.8b", episodes=(30, 90), seed=0):
+    cfg = ARCHS[arch_id].smoke
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(vocab=cfg.vocab)
+
+    @jax.jit
+    def step(p, o, b):
+        l, g = jax.value_and_grad(model.loss)(p, b)
+        p, o = adam_update(p, g, o, 2e-3)
+        return p, o, l
+
+    opt = adam_init(params)
+    for i in range(150):
+        b = {k: jnp.asarray(v) for k, v in stream.batch(i, 16, 32).items()}
+        params, opt, _ = step(params, opt, b)
+    val = stream.batch(99_999, 32, 32)
+    graph = model.graph(seq_len=32, batch=32, max_groups=16)
+    ev = make_lm_evaluator(model, params, graph, val)
+    full_acc = ev(QuantPolicy.uniform(graph, 32.0))
+    u5 = ev(QuantPolicy.uniform(graph, 5.0))
+
+    env = QuantEnv(graph, params, ev, RewardCfg.accuracy_guaranteed())
+    agent = HierarchicalAgent(env, seed=seed)
+    res = run_search(agent, *episodes)
+    return {"arch": arch_id, "full_acc": full_acc, "uniform5_acc": u5,
+            "searched_acc": res.best_log.acc,
+            "avg_wbits": res.best_log.avg_wbits,
+            "avg_abits": res.best_log.avg_abits,
+            "logic_ratio": res.best_log.logic_ratio,
+            "episodes": sum(episodes), "wall_s": res.wall_s}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    OUT.mkdir(parents=True, exist_ok=True)
+
+    episodes = (60, 190) if args.full else (3, 5)
+    fig8_eps = 250 if args.full else 8
+    qat_steps = 60 if args.full else 5
+    train_steps = 250 if args.full else 60
+
+    t0 = time.time()
+    model, params, val, full_acc = train_substrate(train_steps)
+    print(f"substrate CNN acc={full_acc:.1f}% ({time.time()-t0:.0f}s)",
+          flush=True)
+
+    def do(name, fn):
+        if args.only and args.only != name:
+            return
+        t = time.time()
+        out = fn()
+        (OUT / f"{name}.json").write_text(json.dumps(out, indent=1))
+        print(f"[{name}] done in {time.time()-t:.0f}s", flush=True)
+
+    do("table2_quant", lambda: run_table(QuantMode.QUANT, model, params, val,
+                                         full_acc, episodes, qat_steps))
+    do("table3_binarize", lambda: run_table(QuantMode.BINARIZE, model, params,
+                                            val, full_acc, episodes,
+                                            qat_steps))
+    do("fig8_convergence", lambda: run_fig8(model, params, val, fig8_eps))
+    if (OUT / "table2_quant.json").exists():
+        do("table4_compare", lambda: run_table4(
+            json.loads((OUT / "table2_quant.json").read_text())))
+    do("fig7_flop_reward", lambda: run_fig7(model, params, val,
+                                            ((40, 120) if args.full
+                                             else (3, 5))))
+    do("lm_phi4", lambda: run_lm("phi4-mini-3.8b",
+                                 (30, 90) if args.full else (2, 3)))
+    do("lm_mamba2", lambda: run_lm("mamba2-780m",
+                                   (30, 90) if args.full else (2, 3)))
+    print(f"total {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Configurable AutoQ search on the paper's CNN family.
+
+    PYTHONPATH=src python examples/autoq_search_cnn.py \
+        --mode quant --protocol ag --episodes 100 [--granularity channel]
+
+Protocols: rc (resource-constrained, Algorithm-1 bounded, target 5 bits),
+ag (accuracy-guaranteed), flop (AMC-style FLOP reward, section 4.3).
+Granularity: channel (hierarchical DRL, the paper) / layer (HAQ-like flat) /
+flat-channel (Fig. 8 baseline).
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FlatAgent, HierarchicalAgent, LayerBounder, QuantEnv,
+                        RewardCfg, make_cnn_evaluator, run_search)
+from repro.core.ddpg import adam_init, adam_update
+from repro.data import SyntheticImages
+from repro.models.cnn import CNN, CIF10, CIF10_TINY
+from repro.quant.policy import QuantMode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["quant", "binarize"], default="quant")
+    ap.add_argument("--protocol", choices=["rc", "ag", "flop"], default="ag")
+    ap.add_argument("--granularity", default="channel",
+                    choices=["channel", "layer", "flat-channel"])
+    ap.add_argument("--episodes", type=int, default=100)
+    ap.add_argument("--target-bits", type=float, default=5.0)
+    ap.add_argument("--big", action="store_true", help="use CIF10 (7 conv)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    model = CNN(CIF10 if args.big else CIF10_TINY)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticImages(img_size=model.cfg.img_size)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(model.loss)(p, b)
+        p, o = adam_update(p, g, o, 2e-3)
+        return p, o, loss
+
+    opt = adam_init(params)
+    for i in range(250):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i, 128).items()}
+        params, opt, _ = step(params, opt, b)
+    val = data.batch(99_999, 512)
+
+    mode = QuantMode.QUANT if args.mode == "quant" else QuantMode.BINARIZE
+    graph = model.graph()
+    ev = make_cnn_evaluator(model, params, graph, val, mode=mode)
+    reward = {"rc": RewardCfg.resource_constrained(),
+              "ag": RewardCfg.accuracy_guaranteed(),
+              "flop": RewardCfg.flop_based()}[args.protocol]
+    bounder = (LayerBounder(graph, args.target_bits, args.target_bits)
+               if args.protocol == "rc" else None)
+    env = QuantEnv(graph, params, ev, reward, mode=mode, bounder=bounder)
+
+    if args.granularity == "channel":
+        agent = HierarchicalAgent(env, seed=args.seed)
+    else:
+        agent = FlatAgent(env, seed=args.seed,
+                          granularity="layer" if args.granularity == "layer"
+                          else "channel")
+    res = run_search(agent, n_explore=args.episodes // 4,
+                     n_exploit=args.episodes - args.episodes // 4,
+                     callback=lambda ep, log: print(
+                         f"ep {ep:3d} acc={log.acc:5.1f}% "
+                         f"w={log.avg_wbits:4.2f} a={log.avg_abits:4.2f} "
+                         f"r={log.reward:7.2f}", flush=True)
+                     if ep % 10 == 0 else None)
+    out = {"best_acc": res.best_log.acc, "avg_wbits": res.best_log.avg_wbits,
+           "avg_abits": res.best_log.avg_abits,
+           "logic_ratio": res.best_log.logic_ratio, "wall_s": res.wall_s}
+    print(json.dumps(out, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Architecture configs: one module per assigned architecture.
+
+``get(arch_id)`` returns an :class:`ArchSpec` with the full production config,
+a reduced smoke config of the same family, and shape applicability.
+"""
+from repro.configs.registry import ARCHS, ArchSpec, get
+
+__all__ = ["ARCHS", "ArchSpec", "get"]

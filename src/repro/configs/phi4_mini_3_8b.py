@@ -1,0 +1,12 @@
+"""phi4-mini-3.8b [dense] -- 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064, RoPE SwiGLU GQA [arXiv:2412.08905; hf]."""
+from repro.configs.base import dense, spec
+from repro.models.api import LMConfig
+
+SPEC = spec(
+    "phi4-mini-3.8b",
+    LMConfig(name="phi4-mini-3.8b", d_model=3072, n_heads=24, n_kv_heads=8,
+             d_ff=8192, vocab=200064, n_layers=32, pattern=(dense(),)),
+    LMConfig(name="phi4-smoke", d_model=48, n_heads=3, n_kv_heads=1, d_ff=96,
+             vocab=256, n_layers=3, pattern=(dense(),)),
+    family="dense")

@@ -1,0 +1,25 @@
+"""Registry of assigned architectures -- collects the per-arch modules.
+
+``long_500k`` runs only for sub-quadratic archs (SSM / hybrid / local+global);
+see DESIGN.md "long_500k shape skips".
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchSpec
+from repro.configs import (jamba_1_5_large_398b, internlm2_20b,
+                           phi4_mini_3_8b, starcoder2_7b, gemma2_2b,
+                           musicgen_large, granite_moe_3b_a800m,
+                           llama4_scout_17b_a16e, llama_3_2_vision_90b,
+                           mamba2_780m)
+
+_MODULES = (jamba_1_5_large_398b, internlm2_20b, phi4_mini_3_8b,
+            starcoder2_7b, gemma2_2b, musicgen_large, granite_moe_3b_a800m,
+            llama4_scout_17b_a16e, llama_3_2_vision_90b, mamba2_780m)
+
+ARCHS = {m.SPEC.arch_id: m.SPEC for m in _MODULES}
+
+
+def get(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch '{arch_id}'; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]

@@ -1,0 +1,28 @@
+"""AutoQ core: hierarchical DRL search for kernel-wise quantization.
+
+The paper's contribution as a composable library:
+  env.QuantEnv        -- model-agnostic quantization MDP (Eq. 1 states)
+  agent.HierarchicalAgent -- HLC+LLC DDPG with HIRO goal relabeling
+  flat.FlatAgent      -- layer-level (HAQ-like) / flat-channel baselines
+  reward              -- NetScore / FLOP / roofline extrinsic rewards
+  bound.LayerBounder  -- Algorithm 1 resource-constrained action limiting
+  search.run_search   -- explore/exploit episode schedule
+  evaluate            -- jitted QuantPolicy -> accuracy evaluators
+  roofline.TPURoofline -- TPU v5e latency/energy estimates per policy
+"""
+from repro.core.agent import HierarchicalAgent
+from repro.core.bound import LayerBounder
+from repro.core.ddpg import DDPG, DDPGConfig, ReplayBuffer
+from repro.core.env import QuantEnv
+from repro.core.evaluate import make_cnn_evaluator, make_lm_evaluator
+from repro.core.flat import FlatAgent
+from repro.core.reward import RewardCfg, extrinsic_reward, netscore
+from repro.core.roofline import TPURoofline
+from repro.core.search import SearchResult, run_search
+
+__all__ = [
+    "HierarchicalAgent", "LayerBounder", "DDPG", "DDPGConfig", "ReplayBuffer",
+    "QuantEnv", "make_cnn_evaluator", "make_lm_evaluator", "FlatAgent",
+    "RewardCfg", "extrinsic_reward", "netscore", "TPURoofline",
+    "SearchResult", "run_search",
+]

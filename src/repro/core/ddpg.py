@@ -1,0 +1,179 @@
+"""DDPG actor-critic in pure JAX (no optax/flax available offline).
+
+Paper hyperparameters (section 4): actors and critics have two hidden layers
+of 300 units; the actor's output layer is a sigmoid scaled by 32; soft target
+updates with tau = 0.01; batch size 64; replay buffer 2000.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HIDDEN = 300
+ACTION_SCALE = 32.0
+
+
+# ------------------------------------------------------------------ MLP core
+def init_mlp(rng, sizes, dtype=jnp.float32):
+    params = []
+    ks = jax.random.split(rng, len(sizes) - 1)
+    for k, (fan_in, fan_out) in zip(ks, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (fan_in, fan_out)) * np.sqrt(2.0 / fan_in)
+        params.append({"w": w.astype(dtype), "b": jnp.zeros(fan_out, dtype)})
+    return params
+
+
+def mlp_apply(params, x, final_act=None):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    if final_act is not None:
+        x = final_act(x)
+    return x
+
+
+# ----------------------------------------------------------------- pure Adam
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps),
+        params, m, v)
+    return new, {"m": m, "v": v, "t": t}
+
+
+# -------------------------------------------------------------------- agent
+@dataclasses.dataclass
+class DDPGConfig:
+    state_dim: int
+    action_dim: int
+    gamma: float = 0.95
+    tau: float = 0.01
+    actor_lr: float = 1e-4
+    critic_lr: float = 1e-3
+    hidden: int = HIDDEN
+    action_scale: float = ACTION_SCALE   # sigmoid output x scale
+
+
+def _sigmoid_scale(x, scale=ACTION_SCALE):
+    return jax.nn.sigmoid(x) * scale
+
+
+class DDPG:
+    """One deterministic actor-critic controller (used for both HLC & LLC)."""
+
+    def __init__(self, cfg: DDPGConfig, rng):
+        self.cfg = cfg
+        k1, k2 = jax.random.split(rng)
+        h = cfg.hidden
+        actor = init_mlp(k1, (cfg.state_dim, h, h, cfg.action_dim))
+        critic = init_mlp(k2, (cfg.state_dim + cfg.action_dim, h, h, 1))
+        self.state = {
+            "actor": actor, "critic": critic,
+            "actor_t": jax.tree.map(jnp.copy, actor),
+            "critic_t": jax.tree.map(jnp.copy, critic),
+            "opt_a": adam_init(actor), "opt_c": adam_init(critic),
+        }
+        self._act = jax.jit(self._act_impl)
+        self._update = jax.jit(self._update_impl)
+
+    # ------------------------------------------------------------- policies
+    def _act_impl(self, actor, s):
+        scale = self.cfg.action_scale
+        return mlp_apply(actor, s, final_act=lambda x: _sigmoid_scale(x, scale))
+
+    def act(self, s: np.ndarray, noise_scale: float, rng) -> np.ndarray:
+        """Noisy action in [0, action_scale].  s: (state_dim,)."""
+        scale = self.cfg.action_scale
+        a = np.asarray(self._act(self.state["actor"], s[None]))[0]
+        if noise_scale > 0:
+            a = a + rng.normal(0.0, noise_scale * scale, size=a.shape)
+        return np.clip(a, 0.0, scale)
+
+    # --------------------------------------------------------------- update
+    def _update_impl(self, state, batch):
+        cfg = self.cfg
+        s, a, r, s2, done = (batch["s"], batch["a"], batch["r"], batch["s2"],
+                             batch["done"])
+
+        a2 = mlp_apply(state["actor_t"], s2,
+                       final_act=lambda x: _sigmoid_scale(x, cfg.action_scale))
+        q2 = mlp_apply(state["critic_t"], jnp.concatenate([s2, a2], -1))[:, 0]
+        target = r + cfg.gamma * (1.0 - done) * q2
+
+        def critic_loss(critic):
+            q = mlp_apply(critic, jnp.concatenate([s, a], -1))[:, 0]
+            return jnp.mean((q - jax.lax.stop_gradient(target)) ** 2)
+
+        cl, gc = jax.value_and_grad(critic_loss)(state["critic"])
+        critic, opt_c = adam_update(state["critic"], gc, state["opt_c"],
+                                    cfg.critic_lr)
+
+        def actor_loss(actor):
+            pa = mlp_apply(actor, s,
+                           final_act=lambda x: _sigmoid_scale(x, cfg.action_scale))
+            q = mlp_apply(critic, jnp.concatenate([s, pa], -1))[:, 0]
+            return -jnp.mean(q)
+
+        al, ga = jax.value_and_grad(actor_loss)(state["actor"])
+        actor, opt_a = adam_update(state["actor"], ga, state["opt_a"],
+                                   cfg.actor_lr)
+
+        soft = lambda t, p: jax.tree.map(
+            lambda tp, pp: (1 - cfg.tau) * tp + cfg.tau * pp, t, p)
+        new_state = {
+            "actor": actor, "critic": critic,
+            "actor_t": soft(state["actor_t"], actor),
+            "critic_t": soft(state["critic_t"], critic),
+            "opt_a": opt_a, "opt_c": opt_c,
+        }
+        return new_state, {"critic_loss": cl, "actor_loss": al}
+
+    def update(self, batch: Dict[str, np.ndarray]) -> Dict[str, float]:
+        jb = {k: jnp.asarray(v, jnp.float32) for k, v in batch.items()}
+        self.state, metrics = self._update(self.state, jb)
+        return {k: float(v) for k, v in metrics.items()}
+
+
+class ReplayBuffer:
+    """Fixed-size ring buffer (paper: size 2000, batch 64)."""
+
+    def __init__(self, state_dim: int, action_dim: int, size: int = 2000):
+        self.size = size
+        self.n = 0
+        self.idx = 0
+        self.s = np.zeros((size, state_dim), np.float32)
+        self.a = np.zeros((size, action_dim), np.float32)
+        self.r = np.zeros((size,), np.float32)
+        self.s2 = np.zeros((size, state_dim), np.float32)
+        self.done = np.zeros((size,), np.float32)
+
+    def push(self, s, a, r, s2, done):
+        i = self.idx
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.done[i] = s2, float(done)
+        self.idx = (i + 1) % self.size
+        self.n = min(self.n + 1, self.size)
+
+    def sample(self, rng: np.random.Generator, batch: int = 64):
+        idx = rng.integers(0, self.n, size=batch)
+        return {"s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
+                "s2": self.s2[idx], "done": self.done[idx]}
+
+    def __len__(self):
+        return self.n

@@ -1,0 +1,102 @@
+"""Jitted policy evaluators: QuantPolicy -> validation accuracy (%).
+
+The evaluator compiles once (bit vectors are traced *values*, shapes are
+static), so a 400-episode search pays one compile + 400 fast evals -- the
+property that makes the paper's "evaluate without fine-tuning" protocol
+cheap enough to drive DRL.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.binarize import fake_binarize_per_channel
+from repro.quant.linear_quant import fake_quant_per_channel, fake_quant
+from repro.quant.policy import QuantMode, QuantPolicy, QuantizableGraph
+
+
+from repro.quant.apply import _get_path, _set_path  # shared helpers
+
+
+def _quantize_params(params, graph, wbits_list, mode: QuantMode):
+    out = params
+    for layer, bits in zip(graph.layers, wbits_list):
+        w = _get_path(params, layer.param_path)
+        if mode == QuantMode.QUANT:
+            qw = fake_quant_per_channel(w, bits, axis=layer.channel_axis)
+        else:
+            qw = fake_binarize_per_channel(
+                w, bits, axis=layer.channel_axis).astype(w.dtype)
+        out = _set_path(out, layer.param_path, qw)
+    return out
+
+
+def _expand_bits(policy: QuantPolicy, graph: QuantizableGraph):
+    wb = [jnp.asarray(policy.expand_weight_bits(l)) for l in graph.layers]
+    ab = [jnp.float32(policy.act_bits[l.name]) for l in graph.layers]
+    return wb, ab
+
+
+def make_cnn_evaluator(model, params, graph: QuantizableGraph, val_batch,
+                       mode: QuantMode = QuantMode.QUANT
+                       ) -> Callable[[QuantPolicy], float]:
+    names = [l.name for l in graph.layers]
+    xb = {"x": jnp.asarray(val_batch["x"]), "y": jnp.asarray(val_batch["y"])}
+
+    @jax.jit
+    def _eval(wbits_list, abits_list):
+        qp = _quantize_params(params, graph, wbits_list, mode)
+        act_ctx = dict(zip(names, abits_list))
+        return model.accuracy(qp, xb, act_bits=act_ctx) * 100.0
+
+    def evaluator(policy: QuantPolicy) -> float:
+        wb, ab = _expand_bits(policy, graph)
+        return float(_eval(wb, ab))
+
+    return evaluator
+
+
+def make_lm_evaluator(model, params, graph: QuantizableGraph, val_batch,
+                      mode: QuantMode = QuantMode.QUANT
+                      ) -> Callable[[QuantPolicy], float]:
+    """Token-prediction accuracy (%) of the quantized LM on a fixed batch.
+
+    Activation bits: the LM forward takes one scalar per (repeat, pattern
+    position) block; graph sites of block p share p's activation QBN (the
+    paper's own per-FC-layer collapse, extended per block -- DESIGN.md 4).
+    """
+    cfg = model.cfg
+    vb = {k: jnp.asarray(v) for k, v in val_batch.items()}
+    n_pat = len(cfg.pattern)
+
+    # map each graph layer (site) to its pattern position (or None=unembed)
+    site_pos: List[int] = []
+    for l in graph.layers:
+        site_pos.append(int(l.name[1:].split(".")[0])
+                        if l.name.startswith("p") else -1)
+
+    @jax.jit
+    def _eval(wbits_list, abits_list):
+        qp = _quantize_params(params, graph, wbits_list, mode)
+        # block act bits (n_repeat, n_pattern): every repeat shares the site's
+        # scalar (stacked layout); unembed bits ignored (logits stay fp).
+        per_pos = []
+        for p in range(n_pat):
+            cand = [ab for sp, ab in zip(site_pos, abits_list) if sp == p]
+            per_pos.append(cand[0] if cand else jnp.float32(32.0))
+        act = jnp.tile(jnp.stack(per_pos)[None, :], (cfg.n_repeat, 1))
+        logits, _ = model.apply(qp, vb, act_bits=act)
+        pred = jnp.argmax(logits, -1)
+        mask = (vb["labels"] >= 0)
+        acc = jnp.sum((pred == vb["labels"]) & mask) / jnp.maximum(
+            mask.sum(), 1)
+        return acc * 100.0
+
+    def evaluator(policy: QuantPolicy) -> float:
+        wb, ab = _expand_bits(policy, graph)
+        return float(_eval(wb, ab))
+
+    return evaluator

@@ -1,0 +1,92 @@
+"""Lightweight TPU roofline model (paper section 3: "AutoQB adopts a
+lightweight Roofline model to take the latency and energy of a specific
+hardware platform into consideration").
+
+The paper fits linear latency/energy models for an FPGA; here the target is
+TPU v5e, so the model maps a quantization policy to {MXU time, HBM time} per
+layer and takes the roofline max.  Bit-width buckets reflect what a TPU can
+actually exploit (DESIGN.md section 3): storage packs to int4/int8/bf16; MXU
+rate doubles at int8 but does not improve further below 8 bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.quant.policy import QuantPolicy, QuantizableGraph
+
+# TPU v5e per-chip constants (assignment-provided).
+PEAK_BF16 = 197e12          # FLOP/s
+PEAK_INT8 = 394e12          # OP/s (2x bf16)
+HBM_BW = 819e9              # B/s
+ICI_BW = 50e9               # B/s per link
+ENERGY_PJ_PER_MAC_BF16 = 1.3
+ENERGY_PJ_PER_MAC_INT8 = 0.4
+ENERGY_PJ_PER_BYTE_HBM = 15.0
+
+
+def storage_bytes_per_elem(bits: np.ndarray) -> np.ndarray:
+    """Packed storage bucket: <=4 -> int4 (0.5 B), <=8 -> int8, else bf16."""
+    return np.where(bits <= 0.5, 0.0,
+                    np.where(bits <= 4, 0.5,
+                             np.where(bits <= 8, 1.0, 2.0)))
+
+
+def mxu_rate(bits: np.ndarray) -> np.ndarray:
+    """Effective MXU rate for a channel quantized at `bits`."""
+    return np.where(bits <= 8, PEAK_INT8, PEAK_BF16)
+
+
+@dataclasses.dataclass(frozen=True)
+class TPURoofline:
+    chips: int = 1
+    act_bytes: float = 2.0       # activations stay bf16 unless quantized <=8
+
+    def _layer_terms(self, layer, wbits: np.ndarray, abits: float):
+        frac_alive = float(np.mean(wbits > 0.5))
+        macs = layer.macs * frac_alive / self.chips
+        rate = float(np.mean(mxu_rate(np.maximum(wbits, 1e-3))))
+        if abits > 8:             # both operands must be <=8 for int8 MXU
+            rate = PEAK_BF16
+        t_compute = 2.0 * macs / rate
+        w_bytes = float(np.mean(storage_bytes_per_elem(wbits))) * layer.numel \
+            / self.chips
+        a_bytes = (1.0 if abits <= 8 else 2.0) * \
+            (layer.macs / max(layer.c_out, 1)) / self.chips  # input reuse proxy
+        t_mem = (w_bytes + a_bytes) / HBM_BW
+        return t_compute, t_mem, macs, w_bytes + a_bytes
+
+    def latency(self, graph: QuantizableGraph, policy: QuantPolicy) -> float:
+        total = 0.0
+        for layer in graph.layers:
+            wb = policy.expand_weight_bits(layer)
+            tc, tm, _, _ = self._layer_terms(layer, wb, policy.act_bits[layer.name])
+            total += max(tc, tm)
+        return total
+
+    def latency_full(self, graph: QuantizableGraph) -> float:
+        total = 0.0
+        for layer in graph.layers:
+            wb = np.full(layer.c_out, 16.0)
+            tc, tm, _, _ = self._layer_terms(layer, wb, 16.0)
+            total += max(tc, tm)
+        return total
+
+    def energy(self, graph: QuantizableGraph, policy: QuantPolicy) -> float:
+        total = 0.0
+        for layer in graph.layers:
+            wb = policy.expand_weight_bits(layer)
+            abits = policy.act_bits[layer.name]
+            frac_alive = float(np.mean(wb > 0.5))
+            macs = layer.macs * frac_alive
+            pj_mac = ENERGY_PJ_PER_MAC_INT8 if (
+                float(np.mean(wb)) <= 8 and abits <= 8) \
+                else ENERGY_PJ_PER_MAC_BF16
+            w_bytes = float(np.mean(storage_bytes_per_elem(wb))) * layer.numel
+            total += macs * pj_mac + w_bytes * ENERGY_PJ_PER_BYTE_HBM
+        return total * 1e-12      # joules
+
+    def throughput_fps(self, graph: QuantizableGraph,
+                       policy: QuantPolicy) -> float:
+        return 1.0 / max(self.latency(graph, policy), 1e-12)

@@ -1,0 +1,6 @@
+"""Deterministic, shardable synthetic data pipelines."""
+from repro.data.synthetic import (SyntheticImages, TokenStream,
+                                  make_lm_batch, make_image_batch)
+
+__all__ = ["SyntheticImages", "TokenStream", "make_lm_batch",
+           "make_image_batch"]

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for AutoQ's deployment hot spots.
+
+quant_matmul  -- fused int8-dequant (per-output-channel scale) + MXU matmul
+binary_matmul -- bit-plane (binarized) matmul, alpha-weighted sign planes
+fake_quant    -- per-channel quantize-dequantize (QAT forward)
+
+ops.py exposes the jit'd public wrappers (padding + pallas/ref dispatch);
+ref.py holds the pure-jnp oracles every kernel is allclose-tested against.
+Kernels validate under interpret=True on CPU; TPU is the compile target.
+"""
+from repro.kernels.ops import binary_matmul, fake_quant_channels, quant_matmul
+
+__all__ = ["binary_matmul", "fake_quant_channels", "quant_matmul"]

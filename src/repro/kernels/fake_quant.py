@@ -1,0 +1,46 @@
+"""Per-channel quantize-dequantize (QAT forward) Pallas kernel.
+
+Elementwise per-channel fake quantization with precomputed scales/levels
+(the per-channel amax reduction is a cheap one-pass jnp op outside; fusing it
+would force a two-phase kernel for no HBM saving).  Used on the QAT
+fine-tuning path where the same weight tile is fake-quantized every step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, lv_ref, b_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)           # (1, bn)
+    lv = lv_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / s), -lv, lv) * s
+    out = jnp.where(b <= 0.5, 0.0, jnp.where(b >= 24.0, x, q))
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def fake_quant_pallas(x: jnp.ndarray, scale: jnp.ndarray, levels: jnp.ndarray,
+                      bits: jnp.ndarray, *, bm: int = 256, bn: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """x: (M, N); scale/levels/bits: (N,) per-channel."""
+    M, N = x.shape
+    assert M % bm == 0 and N % bn == 0, (M, N, bm, bn)
+    return pl.pallas_call(
+        _kernel,
+        grid=(M // bm, N // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        interpret=interpret,
+    )(x, scale.reshape(1, N), levels.reshape(1, N), bits.reshape(1, N))

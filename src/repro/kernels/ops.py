@@ -1,0 +1,72 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle non-aligned shapes by padding to the block grid, dispatch between the
+Pallas kernel (interpret=True on CPU, compiled on TPU) and the pure-jnp
+reference, and expose a single `use_pallas` switch the serving/QAT paths use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.binary_matmul import binary_matmul_pallas
+from repro.kernels.fake_quant import fake_quant_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not _ON_TPU
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def quant_matmul(x, qw, scale, *, bm=128, bn=128, bk=128, use_pallas=True):
+    """y = x @ (qw * scale[None, :]).  x (M,K) f32/bf16; qw (K,N) int8."""
+    if not use_pallas:
+        return ref.quant_matmul_ref(x, qw, scale)
+    M, K = x.shape
+    N = qw.shape[1]
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(qw, bk, 0), bn, 1)
+    sp = _pad_to(scale, bn, 0)
+    y = quant_matmul_pallas(xp, wp, sp, bm=bm, bn=bn, bk=bk,
+                            interpret=INTERPRET)
+    return y[:M, :N]
+
+
+def binary_matmul(x, planes, alpha, *, bm=128, bn=128, bk=128,
+                  use_pallas=True):
+    """y = sum_p alpha[p] * (x @ planes[p]).  planes (P,K,N) int8 signs."""
+    if not use_pallas:
+        return ref.binary_matmul_ref(x, planes, alpha)
+    M, K = x.shape
+    P, _, N = planes.shape
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    pp = _pad_to(_pad_to(planes, bk, 1), bn, 2)
+    ap = _pad_to(alpha, bn, 1)
+    y = binary_matmul_pallas(xp, pp, ap, bm=bm, bn=bn, bk=bk,
+                             interpret=INTERPRET)
+    return y[:M, :N]
+
+
+def fake_quant_channels(x, scale, levels, bits, *, bm=256, bn=128,
+                        use_pallas=True):
+    """Per-channel quantize-dequantize of x (M, N) with (N,) channel params."""
+    if not use_pallas:
+        return ref.fake_quant_ref(x, scale, levels, bits)
+    M, N = x.shape
+    xp = _pad_to(_pad_to(x, bm, 0), bn, 1)
+    pad1 = lambda v: _pad_to(v, bn, 0)
+    # padded channels: scale/levels 1 avoids div-by-zero; bits 0 prunes them
+    sp = jnp.where(pad1(scale) == 0, 1.0, pad1(scale)) if N % bn else scale
+    lp = jnp.where(pad1(levels) == 0, 1.0, pad1(levels)) if N % bn else levels
+    bp = pad1(bits)
+    y = fake_quant_pallas(xp, sp, lp, bp, bm=bm, bn=bn, interpret=INTERPRET)
+    return y[:M, :N]

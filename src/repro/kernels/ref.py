@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x: jnp.ndarray, qw: jnp.ndarray,
+                     scale: jnp.ndarray) -> jnp.ndarray:
+    """x: (M, K) f32/bf16; qw: (K, N) int8; scale: (N,) f32 per out channel."""
+    w = qw.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def binary_matmul_ref(x: jnp.ndarray, planes: jnp.ndarray,
+                      alpha: jnp.ndarray) -> jnp.ndarray:
+    """Bit-plane matmul: y = sum_m alpha_m * (x @ B_m).
+
+    x: (M, K); planes: (P, K, N) int8 in {-1, +1}; alpha: (P, N) f32
+    (per plane, per output channel).
+    """
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], planes.shape[-1]), jnp.float32)
+    for p in range(planes.shape[0]):
+        acc = acc + (xf @ planes[p].astype(jnp.float32)) * \
+            alpha[p][None, :].astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, levels: jnp.ndarray,
+                   bits: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel quantize-dequantize with precomputed scales.
+
+    x: (M, N); scale, levels, bits: (N,).  bits<=0 prunes; bits>=24 passes
+    through (matches quant.linear_quant.FULL_BITS semantics).
+    """
+    xf = x.astype(jnp.float32)
+    s = scale[None, :].astype(jnp.float32)
+    lv = levels[None, :].astype(jnp.float32)
+    b = bits[None, :].astype(jnp.float32)
+    q = jnp.clip(jnp.round(xf / s), -lv, lv) * s
+    out = jnp.where(b <= 0.5, 0.0, jnp.where(b >= 24.0, xf, q))
+    return out.astype(x.dtype)

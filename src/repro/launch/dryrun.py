@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module -- jax
+locks the device count on first init, and the production meshes need 512
+placeholder host devices.  Do not set this flag anywhere else (smoke tests
+and benchmarks must see 1 device).
+
+Per cell this driver:
+  1. builds the full-size model config and ShapeDtypeStruct inputs
+     (launch/specs.py -- no allocation),
+  2. jits the train/prefill/decode step with the production shardings,
+  3. .lower().compile(), then records memory_analysis(), cost_analysis(),
+     and the post-SPMD collective traffic (launch/hlo.py) to JSON for
+     EXPERIMENTS.md section Dry-run / section Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-780m --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out results/dryrun]
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, get
+from repro.launch import hlo as hlo_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import step_structs
+from repro.launch.steps import (hidden_rules, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                shardings_for)
+from repro.models.api import SHAPES, shape_by_name
+from repro.models.transformer import LM
+from repro.optim import AdamW
+from repro.sharding.ctx import sharding_rules
+from repro.sharding.specs import to_named
+
+
+def _mem_analysis_dict(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:          # CPU backend may not implement it
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_analysis_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("util")}
+    except Exception as e:
+        return {"error": repr(e)}
+
+
+def _apply_opts(cfg, opts, mesh):
+    """Optimization-variant transforms (EXPERIMENTS.md §Perf hillclimbs)."""
+    import dataclasses as dc
+    from jax.sharding import PartitionSpec as P
+    rules = hidden_rules(mesh)
+    if "ep_pad" in opts and cfg.moe is not None:
+        dsz = mesh.shape.get("data", 1)
+        pad = -(-cfg.moe.n_experts // dsz) * dsz
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, pad_to=pad))
+    if "moe_local" in opts and cfg.moe is not None:
+        from repro.launch.steps import moe_local_rules
+        cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, local_dispatch=True))
+        rules.update(moe_local_rules(mesh))
+    if "logits_sharded" in opts:
+        dp = ("pod", "data") if "pod" in mesh.shape else "data"
+        rules["logits"] = P(dp, None, "model")
+    if "weight_gather" in opts:
+        # weight-stationary: gather FSDP shards at use, keep TP shard; stops
+        # GSPMD from resharding full activations every matmul
+        rules["w_col"] = P(None, "model")
+        rules["w_row"] = P("model", None)
+    if "compress_pod" in opts:
+        # model code runs inside shard_map manual over "pod": activation
+        # constraints must only name auto axes
+        rules["hidden"] = P("data", None, None)
+        if "logits" in rules:
+            rules["logits"] = P("data", None, "model")
+    return cfg, rules
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             out_dir: pathlib.Path, keep_hlo: bool = False,
+             opts: tuple = ()) -> dict:
+    spec = get(arch_id)
+    shape = shape_by_name(shape_name)
+    tag = "" if not opts else "__" + "+".join(sorted(opts))
+    result = {"arch": arch_id, "shape": shape_name,
+              "mesh": mesh_kind + tag, "opts": sorted(opts),
+              "mode": shape.mode, "status": "skip"}
+    out_dir.mkdir(parents=True, exist_ok=True)
+    if shape_name in spec.skip_shapes:
+        result["reason"] = spec.skip_reason
+        _write(out_dir, result)
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        cfg, rules = _apply_opts(spec.config, set(opts), mesh)
+        model = LM(cfg)
+        optimizer = AdamW(state_bits=8)
+        structs = step_structs(
+            spec, shape, optimizer, cfg_override=cfg,
+            quant_serve="quant_serve" in opts,
+            kv_bits=8 if "kv8" in opts else None)
+        in_specs, out_specs = shardings_for(structs, shape.mode, cfg, shape,
+                                            mesh)
+        if "compress_pod" in opts and shape.mode == "train" and \
+                mesh_kind == "multi":
+            # shard_map is manual over "pod" only: the batch must enter
+            # sharded over "pod" alone (data-axis sharding is re-derived by
+            # GSPMD inside the auto region)
+            from jax.sharding import PartitionSpec as P
+            in_specs = (in_specs[0], in_specs[1],
+                        jax.tree.map(lambda s: P("pod"), in_specs[2],
+                                     is_leaf=lambda x: isinstance(x, P)))
+        if shape.mode == "train":
+            step = make_train_step(
+                model, optimizer,
+                compress_pod=("compress_pod" in opts and
+                              mesh_kind == "multi"),
+                mesh=mesh,
+                remat="dots" if "remat_dots" in opts else "full")
+        elif shape.mode == "prefill":
+            step = make_prefill_step(model)
+        else:
+            step = make_decode_step(model)
+
+        with mesh, sharding_rules(mesh, rules):
+            jitted = jax.jit(step,
+                             in_shardings=to_named(in_specs, mesh),
+                             out_shardings=to_named(out_specs, mesh))
+            lowered = jitted.lower(*structs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        n_dev = mesh.size
+        result.update(status="ok", devices=n_dev,
+                      lower_s=round(t_lower, 1),
+                      compile_s=round(t_compile, 1))
+        result["memory_analysis"] = _mem_analysis_dict(compiled)
+        result["cost_analysis"] = _cost_analysis_dict(compiled)
+        hlo_text = compiled.as_text()
+        result["hlo_chars"] = len(hlo_text)
+        cs = hlo_mod.analyze(hlo_text, default_group=n_dev)
+        result["hlo_stats"] = {
+            "flops_per_device": cs.flops,
+            "bytes_traffic_per_device": cs.bytes_traffic,
+        }
+        result["collectives"] = {
+            "per_chip_bytes": cs.coll_per_chip_bytes,
+            "op_counts": cs.coll_op_counts,
+            "op_bytes": cs.coll_op_bytes,
+            "warnings": cs.parse_warnings[:10],
+        }
+        if keep_hlo:
+            (out_dir / f"{arch_id}__{shape_name}__{mesh_kind}.hlo.txt"
+             ).write_text(hlo_text)
+        del compiled, lowered, hlo_text
+    except Exception as e:
+        result.update(status="fail", error=repr(e),
+                      traceback=traceback.format_exc()[-4000:])
+    result["wall_s"] = round(time.time() - t0, 1)
+    _write(out_dir, result)
+    return result
+
+
+def _write(out_dir: pathlib.Path, result: dict):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    name = f"{result['arch']}__{result['shape']}__{result['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(result, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--opt", default="",
+                    help="comma list: logits_sharded,remat_dots,ep_pad,"
+                         "quant_serve,kv8,compress_pod")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    opts = tuple(o for o in args.opt.split(",") if o)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) \
+        else [args.shape]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                f = out_dir / f"{arch}__{shape}__{mesh_kind}.json"
+                if args.skip_done and f.exists():
+                    prev = json.loads(f.read_text())
+                    if prev.get("status") in ("ok", "skip"):
+                        print(f"[cached] {arch} {shape} {mesh_kind}: "
+                              f"{prev['status']}", flush=True)
+                        continue
+                r = run_cell(arch, shape, mesh_kind, out_dir,
+                             keep_hlo=args.keep_hlo, opts=opts)
+                msg = r["status"]
+                if r["status"] == "ok":
+                    fl = r["cost_analysis"].get("flops", float("nan"))
+                    msg += (f" compile={r['compile_s']}s flops={fl:.3g} "
+                            f"coll={r['collectives']['per_chip_bytes']:.3g}B")
+                elif r["status"] == "fail":
+                    n_fail += 1
+                    msg += f" error={r['error'][:200]}"
+                print(f"{arch} {shape} {mesh_kind}: {msg}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

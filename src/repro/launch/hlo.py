@@ -1,0 +1,444 @@
+"""Post-SPMD HLO analysis: FLOPs, byte and collective-traffic extraction.
+
+``compiled.cost_analysis()`` counts every while body ONCE, but scan-lowered
+stacks execute their bodies trip-count times -- for a 48-repeat layer scan it
+under-reports FLOPs by ~48x.  This module re-derives the three roofline
+numerators from ``compiled.as_text()`` (post-partitioning, per-device
+shapes), multiplying every instruction by the product of enclosing while
+trip counts (taken from backend_config known_trip_count, falling back to the
+loop-bound constant in the condition computation):
+
+* flops: 2 * result_elems * contracted_size for every dot (+ convolution).
+* bytes_traffic: fusion-granularity HBM traffic -- for every compute
+  instruction (fusion, dot, slice, ...), operand bytes (reads) + result
+  bytes (writes).  dynamic-update-slice -- top-level or as a fusion root --
+  counts 2x the update slice instead of the whole buffer (in-place on TPU),
+  which is what makes decode-step KV-cache accounting sane.  XLA:TPU fuses
+  more aggressively than the CPU text this parses, so it is an upper bound.
+* collectives: ring-model link bytes per chip (all-gather/all-to-all move
+  (n-1)/n of the result, reduce-scatter (n-1)x the scattered result,
+  all-reduce 2(n-1)/n, permute 1x), group size n from replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+_SKIP_OPS = ("parameter(", "constant(", "tuple(", "get-tuple-element(",
+             "bitcast(", "bitcast-convert(", "copy(", "after-all(",
+             "partition-id(", "replica-id(", "iota(", "reshape(",
+             "broadcast(", "while(", "conditional(", "call(",
+             "custom-call(", "rng", "opt-barrier(")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _tensor_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_type(rhs: str) -> str:
+    """Type annotation before the opcode in '<type> opcode(...)'."""
+    m = re.match(r"((?:\([^)]*\))|(?:\S+))\s", rhs)
+    return m.group(1) if m else ""
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+def _ring_factor(kind: str, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "reduce-scatter":
+        return float(n - 1)
+    if kind == "collective-permute":
+        return 1.0
+    return (n - 1) / n          # all-gather, all-to-all
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    bytes_traffic: float = 0.0      # reads + writes, fusion granularity
+    coll_per_chip_bytes: float = 0.0
+    coll_op_counts: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    coll_op_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    parse_warnings: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def bytes_written(self) -> float:   # backwards-compat alias
+        return self.bytes_traffic / 2.0
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            toks = s.split()
+            name = toks[1] if s.startswith("ENTRY") else toks[0]
+            cur = name.lstrip("%").split("(")[0].rstrip(",")
+            comps[cur] = []
+        elif s == "}" or s.startswith("} "):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _instr_types(comps: Dict[str, List[str]]):
+    """instruction name -> (result type string, opcode, operand names)."""
+    types: Dict[str, str] = {}
+    defs: Dict[str, Tuple[str, List[str]]] = {}
+    for lines in comps.values():
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            rtype = _result_type(m.group(2))
+            body = m.group(2)[len(rtype):].lstrip()
+            op = body.split("(")[0]
+            types[m.group(1)] = rtype
+            defs[m.group(1)] = (op, _operand_names(body))
+    return types, defs
+
+
+# Elementwise/layout ops through which a weight-dequant chain passes; on TPU
+# these fuse into the consumer, so an operand read is charged at the
+# *smallest* tensor along the chain (an int8 weight read stays 1 B/elem even
+# though the CPU text materializes the converted f32).
+_CHAIN_OPS = ("convert", "multiply", "transpose", "reshape", "bitcast",
+              "copy", "negate", "divide", "add", "subtract")
+
+
+def _effective_bytes(name: str, types, defs, depth: int = 8) -> int:
+    best = _tensor_bytes(types.get(name, ""))
+    cur = name
+    for _ in range(depth):
+        op, operands = defs.get(cur, ("", []))
+        if op not in _CHAIN_OPS or not operands:
+            break
+        big = max(operands, key=lambda o: _tensor_bytes(types.get(o, "")),
+                  default=None)
+        if big is None:
+            break
+        best = min(best, max(_tensor_bytes(types.get(big, "")), 1))
+        cur = big
+    return best
+
+
+def _while_multipliers(comps, warnings) -> Dict[str, float]:
+    body_of: List[Tuple[str, str, str, float]] = []
+    for parent, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                mt = _TRIP_RE.search(ln)
+                trip = float(mt.group(1)) if mt else None
+                if mb and mc:
+                    body_of.append((parent, mb.group(1), mc.group(1), trip))
+
+    def cond_trip(cond_name: str) -> float:
+        best = 0
+        for ln in comps.get(cond_name, []):
+            for m in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(m.group(1)))
+        if best == 0:
+            warnings.append(f"no trip count for {cond_name}; assuming 1")
+            return 1.0
+        return float(best)
+
+    mult: Dict[str, float] = defaultdict(lambda: 1.0)
+    for _ in range(6):              # fixpoint over nesting depth
+        changed = False
+        for parent, body, cond, trip in body_of:
+            t = trip if trip is not None else cond_trip(cond)
+            new = mult[parent] * t
+            if mult[body] != new:
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(ln: str, result_type: str,
+               types: Dict[str, str]) -> Optional[float]:
+    shapes = _shape_dims(result_type)
+    if not shapes:
+        return None
+    _, rdims = shapes[0]
+    out_elems = 1
+    for d in rdims:
+        out_elems *= d
+    mo = re.search(r"dot\(%?([\w\.\-]+)", ln)
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+    if not (mo and mc):
+        return 2.0 * out_elems      # degenerate: no contraction info
+    lhs_type = types.get(mo.group(1), "")
+    lshapes = _shape_dims(lhs_type)
+    if not lshapes:
+        return 2.0 * out_elems
+    _, ldims = lshapes[0]
+    k = 1
+    for idx in mc.group(1).split(","):
+        if idx and int(idx) < len(ldims):
+            k *= ldims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(body: str) -> List[str]:
+    """Names inside the top-level parens of 'op(...)' (before attributes)."""
+    start = body.find("(")
+    if start < 0:
+        return []
+    depth, end = 0, start
+    for i, ch in enumerate(body[start:], start):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERANDS_RE.findall(body[start:end + 1])
+
+
+def _fusion_roots(comps) -> Dict[str, str]:
+    """fused computation name -> its ROOT line."""
+    roots = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if ln.startswith("ROOT "):
+                roots[cname] = ln
+    return roots
+
+
+def _fusion_traffic(comp_lines: List[str], types) -> float:
+    """HBM traffic of one fusion call, analyzed per parameter.
+
+    A parameter consumed only through dynamic-slice reads its slices, not
+    the whole buffer; a parameter that is the in-place target of a
+    dynamic-update-slice is aliased (0 read); everything else reads fully.
+    Writes: the update sizes of internal dynamic-update-slices if any
+    (the output buffer aliases the input), else the root result.
+    """
+    instrs = []        # (name, op, rtype, operands)
+    params: Dict[str, int] = {}
+    root = None
+    for ln in comp_lines:
+        mi = _INSTR_RE.match(ln)
+        if not mi:
+            continue
+        name, rhs = mi.group(1), mi.group(2)
+        rtype = _result_type(rhs)
+        body = rhs[len(rtype):].lstrip()
+        op = body.split("(")[0]
+        operands = _operand_names(body)
+        instrs.append((name, op, rtype, operands))
+        if op == "parameter":
+            params[name] = _tensor_bytes(rtype)
+        if ln.startswith("ROOT "):
+            root = (name, op, rtype, operands)
+
+    consumers: Dict[str, List[Tuple[str, str, str, List[str]]]] = {}
+    for ins in instrs:
+        for o in ins[3]:
+            consumers.setdefault(o, []).append(ins)
+
+    # read size of a value: slices read slice-sized; pure layout/dtype hops
+    # (convert/bitcast/reshape/transpose/copy) defer to *their* consumers
+    # (on TPU these fuse away and the buffer is never re-materialized).
+    def resolve(name: str, size: int, depth: int = 6) -> float:
+        if depth == 0:
+            return size
+        uses = consumers.get(name, [])
+        if not uses:
+            return 0.0
+        total = 0.0
+        for uname, uop, urtype, uoperands in uses:
+            if uop == "dynamic-slice" and uoperands[0] == name:
+                total += _tensor_bytes(urtype)
+            elif uop == "dynamic-update-slice" and uoperands[0] == name:
+                total += 0.0              # in-place alias target
+            elif uop in ("convert", "bitcast", "reshape", "transpose",
+                         "copy"):
+                total += resolve(uname, min(size, _tensor_bytes(urtype)),
+                                 depth - 1)
+            else:
+                total += size
+                break
+        return min(total, size * len(uses))
+
+    reads = sum(resolve(p, b) for p, b in params.items())
+
+    dus_updates = 0.0
+    for name, op, rtype, operands in instrs:
+        if op == "dynamic-update-slice" and len(operands) >= 2:
+            dus_updates += _tensor_bytes(types.get(operands[1], ""))
+    writes = dus_updates if dus_updates else (
+        _tensor_bytes(root[2]) if root else 0.0)
+    return reads + writes
+
+
+def analyze(hlo_text: str, default_group: int) -> HLOStats:
+    stats = HLOStats()
+    comps = _split_computations(hlo_text)
+    if not comps:
+        stats.parse_warnings.append("no computations parsed")
+        return stats
+    types, defs = _instr_types(comps)
+    mult = _while_multipliers(comps, stats.parse_warnings)
+    roots = _fusion_roots(comps)
+    counts = defaultdict(float)
+    cbytes = defaultdict(float)
+
+    # computations reached via calls= (fusions/calls): their instructions
+    # contribute FLOPs only -- their memory traffic is accounted at the call
+    # site -- and inherit the caller's loop multiplier.
+    called: Dict[str, float] = {}
+    for _ in range(4):              # propagate through nested calls
+        changed = False
+        for cname, lines in comps.items():
+            m = called.get(cname, mult.get(cname, 1.0))
+            for ln in lines:
+                for mc in re.finditer(r"calls=%?([\w\.\-]+)", ln):
+                    tgt = mc.group(1)
+                    if called.get(tgt) != m:
+                        called[tgt] = m
+                        changed = True
+        if not changed:
+            break
+
+    def dus_traffic(dus_line: str) -> float:
+        """2x the update-slice bytes (in-place read-modify-write)."""
+        ops = _operand_names(dus_line.split("=", 1)[-1])
+        if len(ops) >= 2 and ops[1] in types:
+            return 2.0 * _tensor_bytes(types[ops[1]])
+        return 0.0
+
+    for cname, lines in comps.items():
+        in_called = cname in called
+        m = called.get(cname, mult.get(cname, 1.0))
+        for ln in lines:
+            mi = _INSTR_RE.match(ln)
+            if not mi:
+                continue
+            rhs = mi.group(2)
+            rtype = _result_type(rhs)
+            body = rhs[len(rtype):].lstrip()
+
+            if in_called:           # fusion/call body: FLOPs only
+                if body.startswith("dot("):
+                    f = _dot_flops(ln, rtype, types)
+                    if f:
+                        stats.flops += f * m
+                continue
+
+            # --- collectives ---
+            # XLA:CPU upcasts bf16 dots to f32, so collectives ride f32
+            # tensors the TPU would move as bf16; chase each operand to its
+            # source dtype and move min(result, sources) bytes.
+            matched_coll = False
+            for kind in COLLECTIVES:
+                if body.startswith(f"{kind}(") or \
+                        body.startswith(f"{kind}-start("):
+                    nbytes = _tensor_bytes(rtype)
+                    if body.startswith(f"{kind}-start("):
+                        nbytes //= 2        # tuple (operand, result)
+                    src = sum(_effective_bytes(o, types, defs)
+                              for o in _operand_names(body))
+                    if src:
+                        nbytes = min(nbytes, src)
+                    n = _group_size(ln, default_group)
+                    moved = nbytes * _ring_factor(kind, n) * m
+                    stats.coll_per_chip_bytes += moved
+                    counts[kind] += m
+                    cbytes[kind] += moved
+                    matched_coll = True
+                    break
+            if matched_coll:
+                continue
+
+            # --- flops ---
+            if body.startswith("dot("):
+                f = _dot_flops(ln, rtype, types)
+                if f:
+                    stats.flops += f * m
+            elif body.startswith("convolution("):
+                stats.flops += 2.0 * _tensor_bytes(rtype) * m  # coarse
+
+            # --- HBM traffic (reads + writes) ---
+            if any(body.startswith(op) for op in _SKIP_OPS):
+                continue
+            if body.startswith("dynamic-update-slice("):
+                stats.bytes_traffic += dus_traffic(ln) * m
+                continue
+            if body.startswith("dynamic-slice("):
+                stats.bytes_traffic += 2.0 * _tensor_bytes(rtype) * m
+                continue
+            if body.startswith("fusion("):
+                mcall = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if mcall and mcall.group(1) in comps:
+                    stats.bytes_traffic += _fusion_traffic(
+                        comps[mcall.group(1)], types) * m
+                    continue
+            reads = sum(_effective_bytes(o, types, defs)
+                        for o in _operand_names(body))
+            stats.bytes_traffic += (reads + _tensor_bytes(rtype)) * m
+
+    stats.coll_op_counts = dict(counts)
+    stats.coll_op_bytes = dict(cbytes)
+    return stats
+
+
+# Backwards-compatible alias used by dryrun.py
+def collective_stats(hlo_text: str, default_group: int) -> HLOStats:
+    return analyze(hlo_text, default_group)

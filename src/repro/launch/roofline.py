@@ -1,0 +1,140 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+loop-corrected HLO stats recorded by dryrun.py:
+
+  compute    = HLO_FLOPs_per_device / peak          (197 TFLOP/s bf16)
+  memory     = HLO_bytes_traffic_per_device / HBM_bw  (819 GB/s; fusion-
+               granularity reads+writes, dynamic-update-slice in-place)
+  collective = per_chip_link_bytes / link_bw        (~50 GB/s/link ICI)
+
+plus MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (prefill/decode) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs_global.
+
+Usage: python -m repro.launch.roofline [--dir results/dryrun] [--mesh single]
+Writes results/roofline.json and prints the markdown table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict
+
+import numpy as np
+
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_ADVICE = {
+    ("compute", "train"): "fewer recompute FLOPs: loosen remat policy or "
+    "checkpoint only FFN inputs; the rest is useful math",
+    ("compute", "prefill"): "attention chunk sizes tuned for MXU occupancy; "
+    "flops here are mostly useful",
+    ("compute", "decode"): "batch more decode requests per step to amortize "
+    "weight reads into MXU work",
+    ("memory", "train"): "reduce materialized temporaries: fuse optimizer "
+    "update, chunk the vocab loss, drop f32 logit buffers",
+    ("memory", "prefill"): "stream KV-cache writes and keep attention "
+    "workspaces in VMEM-sized chunks",
+    ("memory", "decode"): "quantize weights/KV (AutoQ int8/int4 policies) -- "
+    "decode is weight/KV-bandwidth bound, exactly the term AutoQ shrinks",
+    ("collective", "train"): "re-balance FSDP vs TP: gather weights once per "
+    "layer (not per matmul), overlap all-gathers with compute, compress "
+    "pod-level gradient all-reduce to int8",
+    ("collective", "prefill"): "shard sequence instead of gathering KV; "
+    "combine partial softmax across shards",
+    ("collective", "decode"): "keep decode activations model-sharded end-to-"
+    "end; avoid per-step re-gathering of small tensors",
+}
+
+
+def count_params(cfg) -> Dict[str, float]:
+    import jax
+    from repro.launch.specs import params_struct
+    from repro.models.transformer import LM
+    sds = params_struct(LM(cfg))
+    total = expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(sds)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        if len(leaf.shape) == 4 and any(k in ("wg", "wu", "wd")
+                                        for k in keys):
+            expert += n
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += expert * cfg.moe.top_k / cfg.moe.n_experts
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(cfg, shape, n_params: Dict[str, float]) -> float:
+    toks = shape.global_batch * (1 if shape.mode == "decode" else
+                                 shape.seq_len)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n_params["active"] * toks
+
+
+def analyze_cell(r: dict, cfg, shape) -> dict:
+    hs = r.get("hlo_stats", {})
+    flops_dev = hs.get("flops_per_device", 0.0)
+    traffic_dev = hs.get("bytes_traffic_per_device",
+                         2.0 * hs.get("bytes_written_per_device", 0.0))
+    coll = r.get("collectives", {}).get("per_chip_bytes", 0.0)
+    n_dev = r.get("devices", 256)
+    t_compute = flops_dev / PEAK_BF16
+    t_memory = traffic_dev / HBM_BW
+    t_coll = coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    npar = count_params(cfg)
+    mf = model_flops(cfg, shape, npar)
+    hlo_global = flops_dev * n_dev
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "mode": shape.mode, "devices": n_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "bound_frac": terms[dom] / max(sum(terms.values()), 1e-30),
+        "roofline_frac": t_compute / max(max(terms.values()), 1e-30),
+        "model_flops": mf, "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "params_total": npar["total"], "params_active": npar["active"],
+        "advice": _ADVICE[(dom, shape.mode)],
+    }
+
+
+def main():
+    from repro.configs import ARCHS
+    from repro.models.api import shape_by_name
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/roofline.json")
+    args = ap.parse_args()
+
+    rows = []
+    for f in sorted(pathlib.Path(args.dir).glob(f"*__{args.mesh}.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") != "ok":
+            continue
+        cfg = ARCHS[r["arch"]].config
+        shape = shape_by_name(r["shape"])
+        rows.append(analyze_cell(r, cfg, shape))
+
+    pathlib.Path(args.out).write_text(json.dumps(rows, indent=1))
+    hdr = (f"| {'arch':26s} | {'shape':11s} | compute | memory | collect | "
+           f"dom | useful |")
+    print(hdr)
+    print("|" + "-" * (len(hdr) - 2) + "|")
+    for c in rows:
+        print(f"| {c['arch']:26s} | {c['shape']:11s} "
+              f"| {c['t_compute_s']:.2e} | {c['t_memory_s']:.2e} "
+              f"| {c['t_collective_s']:.2e} | {c['dominant'][:4]} "
+              f"| {c['useful_ratio']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

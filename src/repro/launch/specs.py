@@ -1,0 +1,87 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every step argument.
+
+Weak-type-correct, shardable, zero device allocation -- the dry-run lowers
+jit(step) against these.  One function per step kind:
+
+* train:   (params, opt_state, batch)
+* prefill: (params, batch, cache)
+* decode:  (params, tokens, cache, pos)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchSpec
+from repro.models.api import LMConfig, ShapeCfg
+from repro.models.transformer import LM
+from repro.optim import AdamW
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_struct(cfg: LMConfig, shape: ShapeCfg, mode: str) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if mode == "decode":
+        if cfg.frontend == "audio_stub":
+            batch["tokens"] = SDS((B, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = SDS((B, 1), jnp.int32)
+        return batch
+    if cfg.frontend == "audio_stub":
+        batch["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        batch["img_embeds"] = SDS((B, cfg.n_img_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    if mode == "train":
+        batch["labels"] = SDS((B, S), jnp.int32)
+    return batch
+
+
+def params_struct(model: LM, dtype=jnp.bfloat16) -> Any:
+    return jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0), dtype=dtype))
+
+
+def opt_struct(params_sds: Any, optimizer: AdamW) -> Any:
+    return jax.eval_shape(optimizer.init, params_sds)
+
+
+def cache_struct(model: LM, batch: int, max_len: int,
+                 dtype=jnp.bfloat16, kv_bits=None) -> Any:
+    return jax.eval_shape(
+        lambda: model.init_cache(batch, max_len, dtype=dtype,
+                                 kv_bits=kv_bits))
+
+
+def step_structs(spec: ArchSpec, shape: ShapeCfg, optimizer: AdamW,
+                 dtype=jnp.bfloat16, cfg_override=None, quant_serve=False,
+                 kv_bits=None) -> Tuple[Any, ...]:
+    """All argument ShapeDtypeStructs for the step of this shape's mode.
+
+    quant_serve: params in int8 serving layout ({"q", "s"} per matmul
+    weight); kv_bits=8: int8 KV cache with per-(pos, head) scales.
+    """
+    cfg = cfg_override or spec.config
+    model = LM(cfg)
+    p = params_struct(model, dtype)
+    if quant_serve:
+        p = jax.eval_shape(model.quantize_params_int8, p)
+    if shape.mode == "train":
+        return (p, opt_struct(p, optimizer),
+                batch_struct(cfg, shape, "train"))
+    if shape.mode == "prefill":
+        return (p, batch_struct(cfg, shape, "prefill"),
+                cache_struct(model, shape.global_batch, shape.seq_len, dtype,
+                             kv_bits=kv_bits))
+    # decode: one new token against a seq_len KV cache
+    return (p, batch_struct(cfg, shape, "decode")["tokens"],
+            cache_struct(model, shape.global_batch, shape.seq_len, dtype,
+                         kv_bits=kv_bits),
+            SDS((), jnp.int32))

@@ -1,0 +1,102 @@
+"""jit-able train / prefill / decode steps with their sharding trees."""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.api import LMConfig, ShapeCfg
+from repro.models.transformer import LM
+from repro.optim import AdamW
+from repro.sharding import specs as sh
+from repro.sharding.ctx import sharding_rules
+
+
+def hidden_rules(mesh) -> dict:
+    """Activation constraints model code applies at block boundaries."""
+    if "pod" in mesh.shape:
+        return {"hidden": P(("pod", "data"), None, None)}
+    return {"hidden": P("data", None, None)}
+
+
+def moe_local_rules(mesh) -> dict:
+    """Local MoE dispatch: pin the per-DP-shard token groups so routing
+    cumsums/scatters stay shard-local (models/layers.moe_ffn).  Right for
+    small-expert MoE (granite) where replicating experts across DP is cheap;
+    large-expert MoE (jamba) keeps EP sharding instead."""
+    dp = ("pod", "data") if "pod" in mesh.shape else "data"
+    return {"moe_group": P(dp, None, None)}
+
+
+def make_train_step(model: LM, optimizer: AdamW, lr: float = 1e-4,
+                    compress_pod: bool = False, mesh=None,
+                    batch_sds=None, remat="full") -> Callable:
+    """Standard step, or (compress_pod) a step whose only cross-pod
+    communication is the int8-compressed gradient exchange: loss/grad runs
+    under shard_map manual over "pod" (auto over data/model), each pod sees
+    its local batch, and sharding/collectives.compressed_allreduce averages
+    the gradients."""
+    remat_arg = "dots" if remat == "dots" else True
+    def train_step(params, opt_state, batch):
+        if compress_pod:
+            from repro.sharding.collectives import compressed_allreduce
+
+            def local(params, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss(p, batch, remat=remat_arg))(params)
+                out = compressed_allreduce(
+                    {"g": grads, "l": loss}, "pod")
+                return out["l"], out["g"]
+
+            in_specs = (jax.tree.map(lambda _: P(), params),
+                        jax.tree.map(lambda _: P("pod"), batch))
+            loss, grads = jax.shard_map(
+                local, mesh=mesh, in_specs=in_specs,
+                out_specs=(P(), jax.tree.map(lambda _: P(), params)),
+                axis_names={"pod"}, check_vma=False)(params, batch)
+        else:
+            loss, grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=remat_arg))(params)
+        params, opt_state, om = optimizer.update(params, grads, opt_state,
+                                                 lr=lr)
+        return params, opt_state, {"loss": loss, **om}
+    return train_step
+
+
+def make_prefill_step(model: LM) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+    return prefill_step
+
+
+def make_decode_step(model: LM) -> Callable:
+    def decode_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+    return decode_step
+
+
+def shardings_for(spec_structs: Tuple[Any, ...], mode: str, cfg: LMConfig,
+                  shape: ShapeCfg, mesh):
+    """(in_shardings, out_shardings) PartitionSpec trees for jit."""
+    long_ctx = shape.name == "long_500k" or (
+        shape.mode == "decode" and
+        shape.global_batch % max(mesh.shape.get("data", 1), 1) != 0)
+    if mode == "train":
+        p_sds, o_sds, b_sds = spec_structs
+        ps = sh.param_specs(p_sds, mesh, cfg)
+        os_ = sh.opt_specs(o_sds, ps, mesh)
+        bs = sh.batch_specs(b_sds, mesh)
+        return (ps, os_, bs), (ps, os_, None)
+    if mode == "prefill":
+        p_sds, b_sds, c_sds = spec_structs
+        ps = sh.param_specs(p_sds, mesh, cfg)
+        bs = sh.batch_specs(b_sds, mesh)
+        cs = sh.cache_specs(c_sds, cfg, mesh, long_context=long_ctx)
+        return (ps, bs, cs), (None, cs)
+    p_sds, t_sds, c_sds, _ = spec_structs
+    ps = sh.param_specs(p_sds, mesh, cfg)
+    ts = sh.batch_specs(t_sds, mesh)
+    cs = sh.cache_specs(c_sds, cfg, mesh, long_context=long_ctx)
+    return (ps, ts, cs, None), (None, cs)

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+        --steps 20
+
+--smoke runs the reduced same-family config on the local device; full-size
+configs are exercised via the dry-run (this container has one CPU core).
+On a real cluster, drop --smoke and point --mesh at single/multi to jit the
+train step against the production mesh (same code path the dry-run proves).
+"""
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.data import TokenStream
+from repro.models import LM
+from repro.optim import AdamW
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--state-bits", type=int, default=32, choices=[8, 32])
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.config
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    stream = TokenStream(vocab=cfg.vocab)
+
+    def data_fn(step):
+        b = stream.batch(step, args.batch, args.seq)
+        if cfg.frontend == "audio_stub":
+            rng = np.random.default_rng(step)
+            return {"embeds": rng.normal(size=(args.batch, args.seq,
+                                               cfg.d_model)).astype("f4"),
+                    "labels": b["labels"]}
+        if cfg.frontend == "vision_stub":
+            rng = np.random.default_rng(step)
+            b["img_embeds"] = rng.normal(
+                size=(args.batch, cfg.n_img_tokens,
+                      cfg.d_model)).astype("f4")
+        return b
+
+    ckpt = args.ckpt or tempfile.mkdtemp(prefix=f"{args.arch}_ckpt_")
+    trainer = Trainer(model, params, AdamW(lr=1e-3,
+                                           state_bits=args.state_bits),
+                      data_fn, ckpt,
+                      TrainConfig(total_steps=args.steps,
+                                  ckpt_every=max(args.steps // 2, 1),
+                                  lr=1e-3, log_every=max(args.steps // 5, 1)))
+    out = trainer.run()
+    for h in out["history"]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} "
+              f"gnorm {h['grad_norm']:.3f}")
+    print(f"checkpoints in {ckpt}")
+
+
+if __name__ == "__main__":
+    main()

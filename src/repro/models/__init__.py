@@ -1,0 +1,8 @@
+"""Model zoo: config-driven decoder LMs + the paper's CNN family."""
+from repro.models.api import (BlockDef, LMConfig, MoECfg, SSMCfg, ShapeCfg,
+                              SHAPES, shape_by_name)
+from repro.models.cnn import CNN, CNNConfig, CIF10, CIF10_TINY
+from repro.models.transformer import LM
+
+__all__ = ["BlockDef", "LMConfig", "MoECfg", "SSMCfg", "ShapeCfg", "SHAPES",
+           "shape_by_name", "CNN", "CNNConfig", "CIF10", "CIF10_TINY", "LM"]

@@ -1,0 +1,118 @@
+"""The paper's own CNN model family (CIF10-7CNN and friends) in pure JAX.
+
+AutoQ's experiments run on CIFAR-scale CNNs; this module provides the
+faithful-reproduction substrate: a configurable conv stack with per-output-
+channel quantization hooks and the QuantizableGraph extractor the agent
+searches over (one LayerInfo per conv/FC layer, group_size=1 -> the paper's
+exact per-channel regime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import maybe_quant_act
+from repro.quant.policy import LayerInfo, QuantizableGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    img_size: int = 32
+    in_channels: int = 3
+    channels: Tuple[int, ...] = (32, 32, 64, 64, 128, 128, 128)  # 7 convs
+    pool_after: Tuple[int, ...] = (1, 3, 5)   # maxpool after these conv idxs
+    n_classes: int = 10
+    kernel: int = 3
+
+
+CIF10 = CNNConfig(name="cif10_7cnn")
+CIF10_TINY = CNNConfig(name="cif10_tiny", img_size=16,
+                       channels=(16, 16, 32, 32), pool_after=(1, 3))
+
+
+class CNN:
+    def __init__(self, cfg: CNNConfig):
+        self.cfg = cfg
+
+    def init(self, rng, dtype=jnp.float32):
+        cfg = self.cfg
+        ks = jax.random.split(rng, len(cfg.channels) + 1)
+        params = {}
+        cin = cfg.in_channels
+        for i, cout in enumerate(cfg.channels):
+            fan_in = cfg.kernel * cfg.kernel * cin
+            params[f"conv{i}"] = {
+                "w": (jax.random.normal(ks[i], (cfg.kernel, cfg.kernel, cin,
+                                                cout)) *
+                      np.sqrt(2.0 / fan_in)).astype(dtype),
+                "b": jnp.zeros((cout,), dtype),
+            }
+            cin = cout
+        params["fc"] = {
+            "w": (jax.random.normal(ks[-1], (cin, cfg.n_classes)) *
+                  np.sqrt(1.0 / cin)).astype(dtype),
+            "b": jnp.zeros((cfg.n_classes,), dtype),
+        }
+        return params
+
+    def apply(self, params, x, act_bits=None):
+        """x: (B, H, W, C).  act_bits: None or dict layer-name -> scalar."""
+        cfg = self.cfg
+
+        def ab(name):
+            return None if act_bits is None else act_bits.get(name)
+
+        for i in range(len(cfg.channels)):
+            x = maybe_quant_act(x, ab(f"conv{i}"))
+            p = params[f"conv{i}"]
+            x = jax.lax.conv_general_dilated(
+                x, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jax.nn.relu(x + p["b"])
+            if i in cfg.pool_after:
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                    "VALID")
+        x = jnp.mean(x, axis=(1, 2))                 # global average pool
+        x = maybe_quant_act(x, ab("fc"))
+        return x @ params["fc"]["w"] + params["fc"]["b"]
+
+    def loss(self, params, batch, act_bits=None):
+        logits = self.apply(params, batch["x"], act_bits=act_bits)
+        labels = batch["y"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    def accuracy(self, params, batch, act_bits=None):
+        logits = self.apply(params, batch["x"], act_bits=act_bits)
+        return jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(
+            jnp.float32))
+
+    def graph(self) -> QuantizableGraph:
+        """Per-channel (group_size=1) quantizable graph with MAC counts."""
+        cfg = self.cfg
+        layers = []
+        hw = cfg.img_size
+        cin = cfg.in_channels
+        for i, cout in enumerate(cfg.channels):
+            macs = hw * hw * cfg.kernel * cfg.kernel * cin * cout
+            layers.append(LayerInfo(
+                name=f"conv{i}", kind="conv", c_in=cin, c_out=cout,
+                k=cfg.kernel, stride=1, macs=float(macs),
+                numel=cfg.kernel * cfg.kernel * cin * cout,
+                param_path=(f"conv{i}", "w"), channel_axis=3, n_groups=cout))
+            if i in cfg.pool_after:
+                hw //= 2
+            cin = cout
+        layers.append(LayerInfo(
+            name="fc", kind="linear", c_in=cin, c_out=cfg.n_classes, k=1,
+            stride=1, macs=float(cin * cfg.n_classes),
+            numel=cin * cfg.n_classes, param_path=("fc", "w"),
+            channel_axis=1, n_groups=cfg.n_classes))
+        return QuantizableGraph(layers=layers)

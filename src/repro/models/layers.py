@@ -1,0 +1,267 @@
+"""Core LM layers: RMSNorm, RoPE, (chunked/flash) GQA attention, SwiGLU FFN,
+capacity-based top-k MoE.  Pure functions over explicit parameter dicts.
+
+Attention is computed with a running-logsumexp scan over KV chunks
+(flash-attention schedule in jnp) so prefill at 32k..512k sequence lengths
+never materializes an (Sq, Skv) score matrix.  This is also the pure-jnp
+reference for any future Pallas attention kernel.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.linear_quant import fake_quant
+
+NEG_INF = float("-inf")
+
+
+# --------------------------------------------------------------------- basics
+def wcol(w):
+    """Column-parallel weight at use: gather FSDP shards, keep TP shard.
+
+    Under the "weight_gather" rules (launch/steps.py) this pins the gathered
+    layout P(None, "model") so GSPMD gathers the (cheap) weight over "data"
+    instead of resharding the (expensive) activations every matmul."""
+    from repro.sharding.ctx import constrain
+    return constrain(deq(w), "w_col")
+
+
+def wrow(w):
+    """Row-parallel weight at use: gathered layout P("model", None)."""
+    from repro.sharding.ctx import constrain
+    return constrain(deq(w), "w_row")
+
+
+def deq(w):
+    """Dequantize int8-serving weights ({"q": int8, "s": scale}) at use.
+
+    On TPU the convert+scale fuses into the consuming matmul, so the stored
+    (HBM) format is 1 byte/element + scales -- the deployment layout AutoQ's
+    searched policies compile to (kernels/quant_matmul.py is the explicit-
+    tiling version of the same contraction).  Full-precision leaves pass
+    through untouched.
+    """
+    if isinstance(w, dict) and "q" in w:
+        return w["q"].astype(w["s"].dtype) * w["s"]
+    return w
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (B, S, H, D); pos: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * freqs          # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def maybe_quant_act(x: jnp.ndarray, bits) -> jnp.ndarray:
+    """Per-tensor activation fake-quant; bits None/static-0 disables."""
+    if bits is None:
+        return x
+    return fake_quant(x, bits, axis=None)
+
+
+# ------------------------------------------------------------------ attention
+def _mask_scores(s, q_pos, kv_pos, *, causal, window, kv_valid_len):
+    """s: (B, Hkv, G, Sq, Ck); q_pos (B,Sq); kv_pos (B,Ck)."""
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[:, None, None, None, :]
+    mask = jnp.ones(s.shape, bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if kv_valid_len is not None:
+        kv = kv_valid_len.reshape(-1, 1, 1, 1, 1)
+        mask &= kp < kv
+    return jnp.where(mask, s, NEG_INF)
+
+
+def attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+              attn_cap=None, kv_valid_len=None, chunk=1024):
+    """GQA attention with a flash (running-softmax) scan over KV chunks.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); q_pos: (B, Sq) int32;
+    kv_pos: (B, Skv) int32.  Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, G, D)
+
+    def score(kc, kvp):  # kc: (B, Ck, Hkv, D) -> (B, Hkv, G, Sq, Ck)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kc.astype(jnp.float32))
+        s = softcap(s, attn_cap)
+        return _mask_scores(s, q_pos, kvp, causal=causal, window=window,
+                            kv_valid_len=kv_valid_len)
+
+    if Skv <= chunk:
+        s = score(k, kv_pos)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        msafe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - msafe)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2, 4)
+        return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+    kcs = k.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vcs = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    pcs = kv_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+
+    def body(carry, xs):
+        m, l, o = carry
+        kc, vc, kvp = xs
+        s = score(kc, kvp)                                   # (B,Hkv,G,Sq,Ck)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+        o = o * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kcs, vcs, pcs))
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- FFN
+def swiglu(x, p, act_bits=None):
+    """p: {wg: (d, ff), wu: (d, ff), wd: (ff, d)}."""
+    x = maybe_quant_act(x, act_bits)
+    h = jax.nn.silu(x @ wcol(p["wg"])) * (x @ wcol(p["wu"]))
+    return h @ wrow(p["wd"])
+
+
+# ----------------------------------------------------------------------- MoE
+def moe_ffn(x, p, *, n_experts, top_k, capacity_factor=1.25, act_bits=None,
+            local_dispatch=False):
+    """Capacity-based top-k MoE with scatter dispatch (no TxExC one-hot).
+
+    x: (..., d).  p: {router: (d, E), wg/wu: (E, d, ff), wd: (E, ff, d)}.
+    Tokens beyond an expert's capacity are dropped (standard Switch-style),
+    contributing only their residual path.  capacity_factor <= 0 disables
+    dropping (C = T; exact but unbalanced -- used by tiny smoke configs).
+
+    local_dispatch=True (small-expert MoE under a mesh): split tokens into
+    one group per data shard and vmap the dispatch over groups, with the
+    group dim pinned to the DP axes -- every routing cumsum/scatter becomes
+    shard-local, eliminating the cross-data all-reduce of the (E, C, d)
+    dispatch buffer.  Pairs with DP-replicated (TP-sharded) expert weights
+    (sharding/specs.py honors cfg.moe.local_dispatch), which is the right
+    trade for small experts (EXPERIMENTS.md §Perf, granite hillclimb).
+    """
+    from repro.sharding.ctx import constrain, current_mesh
+    mesh = current_mesh() if local_dispatch else None
+    if mesh is not None:
+        G = 1
+        for a in ("pod", "data"):
+            G *= mesh.shape.get(a, 1)
+        T = 1
+        for dim in x.shape[:-1]:
+            T *= dim
+        if G > 1 and T % G == 0:
+            d = x.shape[-1]
+            xg = constrain(x.reshape(G, T // G, d), "moe_group")
+
+            def one_group(xl):
+                return _moe_ffn_impl(
+                    xl, p, n_experts=n_experts, top_k=top_k,
+                    capacity_factor=capacity_factor, act_bits=act_bits)
+
+            out, probs = jax.vmap(one_group)(xg)
+            out = constrain(out, "moe_group")
+            return out.reshape(x.shape), probs.reshape(T, -1)
+    return _moe_ffn_impl(x, p, n_experts=n_experts, top_k=top_k,
+                         capacity_factor=capacity_factor, act_bits=act_bits)
+
+
+def _moe_ffn_impl(x, p, *, n_experts, top_k, capacity_factor, act_bits):
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    E, K = n_experts, top_k
+    wg, wu, wd = deq(p["wg"]), deq(p["wu"]), deq(p["wd"])
+    E_phys = wg.shape[0]          # >= E when experts are padded for EP
+    if capacity_factor <= 0:
+        C = T
+    else:
+        C = min(T, max(8, int(math.ceil(T * K / E * capacity_factor))))
+
+    # router matmul in model dtype (f32 softmax after): an f32 upcast of xt
+    # here promotes the whole dispatch backward to f32, doubling the TP
+    # all-reduce of the (E, C, d) buffer cotangent (§Perf, jamba hillclimb)
+    logits = (xt @ deq(p["router"]).astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # (T, E)
+    gate_v, gate_i = jax.lax.top_k(probs, K)                  # (T, K)
+    gate_v = gate_v / jnp.maximum(gate_v.sum(-1, keepdims=True), 1e-9)
+
+    # Flatten (token, slot) pairs and compute position-in-expert by cumsum.
+    eidx = gate_i.reshape(-1)                                 # (T*K,)
+    onehot = jax.nn.one_hot(eidx, E_phys, dtype=jnp.int32)    # (T*K, E_phys)
+    pos_all = jnp.cumsum(onehot, axis=0) - 1                  # (T*K, E_phys)
+    pos = jnp.take_along_axis(pos_all, eidx[:, None], axis=1)[:, 0]
+    keep = pos < C
+
+    xq = maybe_quant_act(xt, act_bits)
+    xrep = jnp.repeat(xq, K, axis=0)                          # (T*K, d)
+    buf = jnp.zeros((E_phys, C, d), xt.dtype)
+    buf = buf.at[eidx, jnp.clip(pos, 0, C - 1)].add(
+        jnp.where(keep[:, None], xrep, 0))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(h) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd)               # (E_phys, C, d)
+
+    gathered = out_buf[eidx, jnp.clip(pos, 0, C - 1)]         # (T*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    weighted = gathered * gate_v.reshape(-1)[:, None].astype(gathered.dtype)
+    out = weighted.reshape(T, K, d).sum(axis=1)
+    return out.reshape(orig_shape), probs
+
+
+def moe_aux_loss(probs, gate_i, n_experts):
+    """Switch-style load-balance loss from router probs + top-1 assignment."""
+    T = probs.shape[0]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_i[:, 0], n_experts, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return n_experts * jnp.sum(frac_tokens * frac_probs)

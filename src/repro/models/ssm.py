@@ -1,0 +1,181 @@
+"""Mamba2 (SSD, state-space duality) block in JAX.
+
+Training/prefill uses the SSD *block decomposition*: within chunks of length Q
+the recurrence is evaluated as attention-like matmuls (MXU-friendly), across
+chunks a lax.scan carries the (H, P, N) state.  Decode is the O(1) single-step
+state update.  This follows arXiv:2405.21060 section 6; simplifications
+(single B/C group, conv on x only) are noted in DESIGN.md.
+
+Shapes: B batch, S seq, H heads, P head_dim, N d_state, Q chunk.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import SSMCfg
+from repro.models.layers import deq, rmsnorm, wcol, wrow
+
+
+def init_mamba_params(rng, d_model: int, cfg: SSMCfg, dtype=jnp.float32):
+    di = cfg.d_inner(d_model)
+    H = cfg.n_heads(d_model)
+    N = cfg.d_state
+    ks = jax.random.split(rng, 8)
+
+    def lin(key, fan_in, shape):
+        return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(dtype)
+
+    return {
+        "w_xz": lin(ks[0], d_model, (d_model, 2 * di)),
+        "w_bc": lin(ks[1], d_model, (d_model, 2 * N)),
+        "w_dt": lin(ks[2], d_model, (d_model, H)),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "A_log": jnp.zeros((H,), dtype),                    # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), dtype),
+        "conv_w": lin(ks[3], cfg.d_conv, (cfg.d_conv, di)),
+        "conv_b": jnp.zeros((di,), dtype),
+        "norm_w": jnp.zeros((di,), dtype),
+        "w_out": lin(ks[4], di, (di, d_model)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B, S, di); w: (K, di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssd_chunk_scan(xh, Bm, Cm, dt, A, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); Bm, Cm: (B, S, N); dt: (B, S, H); A: (H,) negative.
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    Bb, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:  # pad tail with dt=0 steps: decay=1, no state update
+        pad = Q - S % Q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    # log decay per step: log a_t = dt_t * A  (A < 0)
+    la = dt * A                                              # (B, S, H)
+    xc = xh.reshape(Bb, nc, Q, H, P)
+    Bc = Bm.reshape(Bb, nc, Q, N)
+    Cc = Cm.reshape(Bb, nc, Q, N)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    lac = la.reshape(Bb, nc, Q, H)
+
+    def body(state, xs):
+        xq, bq, cq, dq, lq = xs                              # leading dim B
+        l_cum = jnp.cumsum(lq, axis=1)                       # (B, Q, H)
+        l_tot = l_cum[:, -1]                                 # (B, H)
+
+        # inter-chunk: contribution of the carried state.
+        dec_in = jnp.exp(l_cum)                              # (B, Q, H)
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, state) * dec_in[..., None]
+
+        # intra-chunk: masked decay kernel M[t, s] = e^{l_t - l_s} dt_s (C_t.B_s)
+        rel = l_cum[:, :, None, :] - l_cum[:, None, :, :]    # (B, Qt, Qs, H)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        rel = jnp.where(mask[None, :, :, None], rel, -jnp.inf)
+        cb = jnp.einsum("btn,bsn->bts", cq, bq)              # (B, Qt, Qs)
+        M = jnp.exp(rel) * cb[..., None] * dq[:, None, :, :]  # (B,Qt,Qs,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", M, xq)
+
+        # state update
+        dec_out = jnp.exp(l_tot[:, None, :] - l_cum)         # (B, Q, H)
+        upd = jnp.einsum("bqh,bqhp,bqn->bhpn", dec_out * dq, xq, bq)
+        new_state = state * jnp.exp(l_tot)[..., None, None] + upd
+        return new_state, y_inter + y_intra
+
+    s0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = tuple(t.transpose(1, 0, *range(2, t.ndim))
+               for t in (xc, Bc, Cc, dtc, lac))
+    final, yc = jax.lax.scan(body, s0, xs)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(Bb, S, H, P)
+    return y[:, :S_orig], final
+
+
+def mamba_forward(params, x, cfg: SSMCfg, d_model: int):
+    """Full-sequence forward.  x: (B, S, d).  Returns (y, final_cache)."""
+    Bb, S, _ = x.shape
+    di = cfg.d_inner(d_model)
+    H, P, N = cfg.n_heads(d_model), cfg.head_dim, cfg.d_state
+
+    xz = x @ wcol(params["w_xz"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = jax.nn.silu(_causal_conv(xi, params["conv_w"], params["conv_b"]))
+    bc = x @ wcol(params["w_bc"])
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)
+    dt = jax.nn.softplus((x @ wcol(params["w_dt"])).astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xi.astype(jnp.float32).reshape(Bb, S, H, P)
+    y, state = _ssd_chunk_scan(xh, Bm, Cm, dt, A, cfg.chunk)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(Bb, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ wrow(params["w_out"])
+    conv_cache = _last_conv_window(xz, cfg)
+    return out, {"state": state, "conv": conv_cache}
+
+
+def _last_conv_window(xz, cfg: SSMCfg):
+    """(d_conv-1) trailing pre-conv activations, for decode continuation."""
+    di2 = xz.shape[-1]
+    xi = xz[..., : di2 // 2]
+    K = cfg.d_conv
+    return xi[:, -(K - 1):, :] if xz.shape[1] >= K - 1 else \
+        jnp.pad(xi, ((0, 0), (K - 1 - xz.shape[1], 0), (0, 0)))
+
+
+def init_mamba_cache(batch: int, d_model: int, cfg: SSMCfg, dtype=jnp.float32):
+    H, P, N = cfg.n_heads(d_model), cfg.head_dim, cfg.d_state
+    di = cfg.d_inner(d_model)
+    return {
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode_step(params, x, cache, cfg: SSMCfg, d_model: int):
+    """Single-token decode.  x: (B, 1, d).  Returns (y: (B, 1, d), cache)."""
+    Bb = x.shape[0]
+    di = cfg.d_inner(d_model)
+    H, P, N = cfg.n_heads(d_model), cfg.head_dim, cfg.d_state
+
+    xz = x @ wcol(params["w_xz"])
+    xi, z = jnp.split(xz, 2, axis=-1)                        # (B, 1, di)
+    win = jnp.concatenate([cache["conv"], xi], axis=1)       # (B, K, di)
+    conv = (win * params["conv_w"][None]).sum(axis=1, keepdims=True) \
+        + params["conv_b"]
+    xi = jax.nn.silu(conv)
+
+    bc = (x @ wcol(params["w_bc"])).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc[:, 0], 2, axis=-1)                 # (B, N)
+    dt = jax.nn.softplus((x @ wcol(params["w_dt"])).astype(jnp.float32)[:, 0]
+                         + params["dt_bias"].astype(jnp.float32))  # (B, H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                      # (B, H)
+
+    xh = xi.astype(jnp.float32).reshape(Bb, H, P)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    state = cache["state"] * a[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    y = y + params["D"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(Bb, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm_w"])
+    out = y @ wrow(params["w_out"])
+    new_cache = {"state": state, "conv": win[:, 1:, :]}
+    return out, new_cache

@@ -1,0 +1,510 @@
+"""Config-driven decoder LM covering all assigned architecture families.
+
+One implementation assembles: GQA attention (RoPE, sliding window, softcap),
+SwiGLU / MoE FFNs, Mamba2 (SSD) blocks, and cross-attention (VLM) blocks from
+an :class:`LMConfig` periodic pattern.  The stack lowers as ``lax.scan`` over
+pattern repeats (stacked parameters, leading axis n_repeat), so HLO size is
+O(pattern period), not O(depth).
+
+Entry points: ``apply`` (full-sequence train forward), ``prefill`` (forward +
+cache fill, last-token logits), ``decode_step`` (single token with cache).
+Kernel-wise quantization hooks: weights are fake-quantized outside the forward
+via ``quant.apply_policy_to_params``; activations via ``act_bits``, one scalar
+per (repeat, pattern-position) block.
+
+KV-cache convention: unwritten slots carry position ``POS_SENTINEL`` (int32
+max) so the causal mask ``kv_pos <= q_pos`` rejects them without a separate
+validity length.  ``local_attn`` blocks use a ring buffer of size ``window``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ssm as ssm_mod
+from repro.models.api import BlockDef, LMConfig
+from repro.models.layers import (attention, deq, maybe_quant_act, moe_ffn,
+                                 rmsnorm, rope, softcap, swiglu, wcol, wrow)
+from repro.quant.policy import LayerInfo, QuantizableGraph
+from repro.sharding.ctx import constrain
+
+POS_SENTINEL = np.iinfo(np.int32).max
+
+
+def _lin_init(key, fan_in, shape, dtype):
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+# ----------------------------------------------------- quantized KV caching
+def _kv_quant(x):
+    """(B, S, Hkv, hd) -> (int8 values, f32 scale (B, S, Hkv))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    s = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / s[..., None]), -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def _kv_deq(cache, key):
+    kq = cache[key]
+    if kq.dtype == jnp.int8:
+        return kq.astype(jnp.float32) * cache[key + "_s"][..., None]
+    return kq
+
+
+def _kv_write(cache, k, v, pos, slot):
+    """Write (k, v, pos) into the cache window starting at `slot`,
+    quantizing per (position, head) when the cache stores int8."""
+    out = dict(cache)
+    for key, val in (("k", k), ("v", v)):
+        if cache[key].dtype == jnp.int8:
+            q, s = _kv_quant(val)
+            out[key] = jax.lax.dynamic_update_slice(cache[key], q,
+                                                    (0, slot, 0, 0))
+            out[key + "_s"] = jax.lax.dynamic_update_slice(
+                cache[key + "_s"], s, (0, slot, 0))
+        else:
+            out[key] = jax.lax.dynamic_update_slice(
+                cache[key], val.astype(cache[key].dtype), (0, slot, 0, 0))
+    out["pos"] = jax.lax.dynamic_update_slice(cache["pos"],
+                                              pos.astype(jnp.int32),
+                                              (0, slot))
+    return out
+
+
+def _kv_store_full(cache, k, v):
+    """Cross-attention memory: overwrite the whole (fixed-length) cache."""
+    out = dict(cache)
+    for key, val in (("k", k), ("v", v)):
+        if cache[key].dtype == jnp.int8:
+            q, s = _kv_quant(val)
+            out[key], out[key + "_s"] = q, s
+        else:
+            out[key] = val.astype(cache[key].dtype)
+    return out
+
+
+class LM:
+    """Stateless model object: config + pure init/apply functions."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def _init_block(self, rng, bdef: BlockDef, dtype):
+        cfg = self.cfg
+        d, hd = cfg.d_model, cfg.hdim
+        Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+        ks = iter(jax.random.split(rng, 16))
+        p: Dict[str, Any] = {"norm": jnp.zeros((d,), dtype)}
+        if bdef.kind in ("attn", "local_attn", "cross_attn"):
+            p["wq"] = _lin_init(next(ks), d, (d, Hq * hd), dtype)
+            p["wk"] = _lin_init(next(ks), d, (d, Hkv * hd), dtype)
+            p["wv"] = _lin_init(next(ks), d, (d, Hkv * hd), dtype)
+            p["wo"] = _lin_init(next(ks), Hq * hd, (Hq * hd, d), dtype)
+        elif bdef.kind == "mamba":
+            p["mamba"] = ssm_mod.init_mamba_params(next(ks), d, cfg.ssm, dtype)
+        else:
+            raise ValueError(bdef.kind)
+        if bdef.has_ffn:
+            p["ffn_norm"] = jnp.zeros((d,), dtype)
+            if bdef.use_moe:
+                m = cfg.moe
+                ep = m.n_experts_phys
+                p["router"] = _lin_init(next(ks), d, (d, m.n_experts), dtype)
+                p["wg"] = _lin_init(next(ks), d, (ep, d, m.d_ff), dtype)
+                p["wu"] = _lin_init(next(ks), d, (ep, d, m.d_ff), dtype)
+                p["wd"] = _lin_init(next(ks), m.d_ff,
+                                    (ep, m.d_ff, d), dtype)
+            else:
+                p["wg"] = _lin_init(next(ks), d, (d, cfg.d_ff), dtype)
+                p["wu"] = _lin_init(next(ks), d, (d, cfg.d_ff), dtype)
+                p["wd"] = _lin_init(next(ks), cfg.d_ff, (cfg.d_ff, d), dtype)
+        return p
+
+    def init(self, rng, dtype=jnp.float32):
+        cfg = self.cfg
+        keys = jax.random.split(rng, len(cfg.pattern) + 2)
+        blocks = []
+        for p_idx, bdef in enumerate(cfg.pattern):
+            reps = jax.random.split(keys[p_idx], cfg.n_repeat)
+            stacked = jax.vmap(
+                lambda k, b=bdef, dt=dtype: self._init_block(k, b, dt))(reps)
+            blocks.append(stacked)
+        params = {
+            "blocks": tuple(blocks),
+            "final_norm": jnp.zeros((cfg.d_model,), dtype),
+            "unembed": _lin_init(keys[-1], cfg.d_model,
+                                 (cfg.d_model, cfg.vocab_padded), dtype),
+        }
+        if cfg.frontend != "audio_stub":
+            params["embed"] = (jax.random.normal(
+                keys[-2], (cfg.vocab_padded, cfg.d_model)) /
+                np.sqrt(cfg.d_model)).astype(dtype)
+        return params
+
+    # ---------------------------------------------------------------- blocks
+    def _attn_block(self, bp, bdef, x, *, q_pos, mode, img_embeds=None,
+                    cache=None, write_pos=None, act_bits=None):
+        """Self- or cross-attention + residual.  Returns (x, new_cache)."""
+        cfg = self.cfg
+        B, S, _ = x.shape
+        Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
+        h = rmsnorm(x, bp["norm"], cfg.norm_eps)
+        h = maybe_quant_act(h, act_bits)
+        q = (h @ wcol(bp["wq"])).reshape(B, S, Hq, hd)
+        new_cache = cache
+
+        if bdef.kind == "cross_attn":
+            causal, window = False, None
+            if mode == "decode":
+                k, v = _kv_deq(cache, "k"), _kv_deq(cache, "v")
+            else:
+                Si = img_embeds.shape[1]
+                k = (img_embeds @ wcol(bp["wk"])).reshape(B, Si, Hkv, hd)
+                v = (img_embeds @ wcol(bp["wv"])).reshape(B, Si, Hkv, hd)
+                if cache is not None:
+                    new_cache = _kv_store_full(cache, k, v)
+            kv_pos = jnp.zeros((B, k.shape[1]), jnp.int32)
+        else:
+            causal = True
+            window = cfg.window if bdef.kind == "local_attn" else None
+            k = (h @ wcol(bp["wk"])).reshape(B, S, Hkv, hd)
+            v = (h @ wcol(bp["wv"])).reshape(B, S, Hkv, hd)
+            q = rope(q, q_pos, cfg.rope_theta)
+            k = rope(k, q_pos, cfg.rope_theta)
+            kv_pos = q_pos
+            if cache is not None:
+                W = cache["k"].shape[1]
+                if mode == "decode":
+                    slot = write_pos % W if bdef.kind == "local_attn" \
+                        else write_pos
+                    new_cache = _kv_write(cache, k, v, q_pos, slot)
+                    k = _kv_deq(new_cache, "k")
+                    v = _kv_deq(new_cache, "v")
+                    kv_pos = new_cache["pos"]
+                else:  # prefill: write last W positions from offset 0
+                    kw, vw, pw = k, v, q_pos
+                    if W < S:
+                        kw, vw, pw = k[:, -W:], v[:, -W:], q_pos[:, -W:]
+                    new_cache = _kv_write(cache, kw, vw, pw, 0)
+        chunk = k.shape[1] if S == 1 else 1024
+        out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                        window=window, attn_cap=cfg.attn_softcap, chunk=chunk)
+        x = x + out.reshape(B, S, Hq * hd) @ wrow(bp["wo"])
+        return x, new_cache
+
+    def _ffn(self, bp, bdef, x, act_bits=None):
+        cfg = self.cfg
+        h = rmsnorm(x, bp["ffn_norm"], cfg.norm_eps)
+        if bdef.use_moe:
+            m = cfg.moe
+            out, probs = moe_ffn(h, bp, n_experts=m.n_experts, top_k=m.top_k,
+                                 capacity_factor=m.capacity_factor,
+                                 act_bits=act_bits,
+                                 local_dispatch=m.local_dispatch)
+            frac = jnp.mean(probs, axis=0)
+            aux = m.n_experts * jnp.sum(frac * frac)
+            return x + out, aux
+        return x + swiglu(h, bp, act_bits=act_bits), jnp.float32(0.0)
+
+    def _apply_block(self, bp, bdef: BlockDef, x, *, q_pos, mode,
+                     img_embeds=None, cache=None, write_pos=None,
+                     act_bits=None):
+        if bdef.kind == "mamba":
+            h = rmsnorm(x, bp["norm"], self.cfg.norm_eps)
+            h = maybe_quant_act(h, act_bits)
+            if mode == "decode":
+                out, mcache = ssm_mod.mamba_decode_step(
+                    bp["mamba"], h, cache, self.cfg.ssm, self.cfg.d_model)
+            else:
+                out, mcache = ssm_mod.mamba_forward(
+                    bp["mamba"], h, self.cfg.ssm, self.cfg.d_model)
+                if cache is not None:
+                    mcache = jax.tree.map(lambda a, c: a.astype(c.dtype),
+                                          mcache, cache)
+            x = x + out
+            new_cache = mcache
+        else:
+            x, new_cache = self._attn_block(
+                bp, bdef, x, q_pos=q_pos, mode=mode, img_embeds=img_embeds,
+                cache=cache, write_pos=write_pos, act_bits=act_bits)
+        aux = jnp.float32(0.0)
+        if bdef.has_ffn:
+            x, aux = self._ffn(bp, bdef, x, act_bits=act_bits)
+        return x, new_cache, aux
+
+    # --------------------------------------------------------------- helpers
+    def _embed_tokens(self, params, tokens):
+        emb = params["embed"]
+        if isinstance(emb, dict):          # int8 rows + per-row scale
+            return jnp.take(emb["q"], tokens, axis=0).astype(
+                emb["s"].dtype) * jnp.take(emb["s"], tokens, axis=0)
+        return jnp.take(emb, tokens, axis=0)
+
+    def _embed(self, params, batch):
+        if self.cfg.frontend == "audio_stub":
+            x = batch["embeds"]
+        else:
+            x = self._embed_tokens(params, batch["tokens"])
+        return constrain(x, "hidden")
+
+    def logits_of(self, params, x):
+        cfg = self.cfg
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        lg = x @ wcol(params["unembed"])
+        lg = constrain(lg, "logits")
+        lg = softcap(lg, cfg.logit_softcap)
+        if cfg.vocab_padded != cfg.vocab:   # mask padded vocab entries
+            valid = jnp.arange(cfg.vocab_padded) < cfg.vocab
+            lg = jnp.where(valid, lg, jnp.asarray(-1e30, lg.dtype))
+        return lg
+
+    # ------------------------------------------------- int8 serving weights
+    def quantize_params_int8(self, params):
+        """Deployment transform: every matmul weight -> {"q": int8, "s"}.
+
+        Scales are per output channel (last axis), reducing over the
+        contraction axis; embedding rows get per-row scales.  Norms, biases
+        and scalar leaves stay full precision.  The forward dequantizes at
+        use (layers.deq), which fuses into the consuming matmul on TPU --
+        HBM weight traffic drops to 1 byte/element.
+        """
+        MATMUL_LEAVES = {"wq", "wk", "wv", "wo", "wg", "wu", "wd", "router",
+                         "w_xz", "w_bc", "w_dt", "w_out", "embed", "unembed"}
+
+        def one(path, w):
+            name = str(path[-1])
+            if name not in MATMUL_LEAVES or w.ndim < 2 or \
+                    w.dtype == jnp.int8:
+                return w
+            if name == "embed":
+                red = (1,)                         # per-row (vocab) scale
+            else:
+                red = (w.ndim - 2,)                # over contraction axis
+            amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=red,
+                           keepdims=True)
+            s = jnp.where(amax > 0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127,
+                         127).astype(jnp.int8)
+            return {"q": q, "s": s.astype(jnp.float32)}
+
+        flat = jax.tree_util.tree_map_with_path(
+            lambda p, w: one([getattr(k, "key", getattr(k, "idx", "?"))
+                              for k in p], w), params)
+        return flat
+
+    # ---------------------------------------------------------------- train
+    def apply(self, params, batch, act_bits: Optional[jnp.ndarray] = None,
+              remat: bool = False):
+        """Full-sequence forward.  Returns (logits, aux_loss).
+
+        act_bits: optional (n_repeat, len(pattern)) activation QBN array.
+        remat: rematerialize each pattern repeat in the backward pass
+        (activation memory O(1) in depth; standard at 70B+ scale).
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        img_embeds = batch.get("img_embeds")
+
+        def repeat_body(carry, xs):
+            x, aux = carry
+            blocks_slice, ab_slice = xs
+            for p_idx, bdef in enumerate(cfg.pattern):
+                ab = None if ab_slice is None else ab_slice[p_idx]
+                x, _, a = self._apply_block(
+                    blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="train",
+                    img_embeds=img_embeds, act_bits=ab)
+                x = constrain(x, "hidden")
+                aux = aux + a
+            return (x, aux), None
+
+        if act_bits is None:
+            body = lambda c, bs: repeat_body(c, (bs, None))
+            xs = params["blocks"]
+        else:
+            body, xs = repeat_body, (params["blocks"], act_bits)
+        if remat:
+            # True -> save nothing per repeat; "dots" -> keep matmul outputs
+            # (incl. FSDP-gathered weight products: no re-gather in backward)
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if remat == "dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+        return self.logits_of(params, x), aux
+
+    def loss(self, params, batch, act_bits=None, remat: bool = False):
+        logits, aux = self.apply(params, batch, act_bits=act_bits,
+                                 remat=remat)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), jnp.maximum(labels, 0)[..., None],
+            axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1.0)
+        return nll + 0.01 * aux
+
+    # ---------------------------------------------------------------- caches
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   kv_bits: Optional[int] = None):
+        """Per-pattern-position stacked cache pytree (leading dim n_repeat).
+
+        kv_bits=8 stores K/V int8 with per-(position, head) scales -- halving
+        the dominant HBM term of long-context decode (DESIGN.md section 3)."""
+        cfg = self.cfg
+        kv_dt = jnp.int8 if kv_bits == 8 else dtype
+
+        def kv_entry(b, s):
+            one = {
+                "k": jnp.zeros((b, s, cfg.n_kv_heads, cfg.hdim), kv_dt),
+                "v": jnp.zeros((b, s, cfg.n_kv_heads, cfg.hdim), kv_dt),
+            }
+            if kv_bits == 8:
+                one["k_s"] = jnp.ones((b, s, cfg.n_kv_heads), jnp.float32)
+                one["v_s"] = jnp.ones((b, s, cfg.n_kv_heads), jnp.float32)
+            return one
+
+        caches = []
+        for bdef in cfg.pattern:
+            if bdef.kind == "mamba":
+                one = ssm_mod.init_mamba_cache(batch, cfg.d_model, cfg.ssm,
+                                               dtype)
+            elif bdef.kind == "cross_attn":
+                one = kv_entry(batch, cfg.n_img_tokens)
+            else:
+                W = max_len if (bdef.kind != "local_attn" or cfg.window is None) \
+                    else min(max_len, cfg.window)
+                one = kv_entry(batch, W)
+                one["pos"] = jnp.full((batch, W), POS_SENTINEL, jnp.int32)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_repeat,) + a.shape),
+                one)
+            caches.append(stacked)
+        return tuple(caches)
+
+    # ------------------------------------------------------------ prefill
+    def prefill(self, params, batch, cache, act_bits=None):
+        """Run the prompt, fill the cache, return last-token logits."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S, _ = x.shape
+        q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        img_embeds = batch.get("img_embeds")
+
+        def repeat_body(x, xs):
+            blocks_slice, cache_slice = xs
+            new_slices = []
+            for p_idx, bdef in enumerate(cfg.pattern):
+                x, nc, _ = self._apply_block(
+                    blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="prefill",
+                    img_embeds=img_embeds, cache=cache_slice[p_idx])
+                x = constrain(x, "hidden")
+                new_slices.append(nc)
+            return x, tuple(new_slices)
+
+        x, new_cache = jax.lax.scan(repeat_body, x,
+                                    (params["blocks"], cache))
+        logits = self.logits_of(params, x[:, -1:, :])
+        return logits, new_cache
+
+    # ------------------------------------------------------------- decode
+    def decode_step(self, params, tokens, cache, pos, act_bits=None):
+        """One decode step.  tokens: (B, 1) int32 (or (B, 1, d) embeds for
+        audio_stub); pos: scalar int32.  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio_stub":
+            x = tokens
+        else:
+            x = self._embed_tokens(params, tokens)
+        x = constrain(x, "hidden")
+        B = x.shape[0]
+        q_pos = jnp.full((B, 1), pos, jnp.int32)
+
+        def repeat_body(x, xs):
+            blocks_slice, cache_slice = xs
+            new_slices = []
+            for p_idx, bdef in enumerate(cfg.pattern):
+                x, nc, _ = self._apply_block(
+                    blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="decode",
+                    cache=cache_slice[p_idx], write_pos=pos)
+                x = constrain(x, "hidden")
+                new_slices.append(nc if nc is not None else cache_slice[p_idx])
+            return x, tuple(new_slices)
+
+        x, new_cache = jax.lax.scan(repeat_body, x, (params["blocks"], cache))
+        return self.logits_of(params, x), new_cache
+
+    # ------------------------------------------------------- quant graph
+    def graph(self, seq_len: int, batch: int,
+              max_groups: int = 64) -> QuantizableGraph:
+        """Quantizable-layer graph (weights of every matmul site).
+
+        Stacked (scan) weights appear as one LayerInfo per (pattern position,
+        site); its bit vector is shared across the n_repeat stack (DESIGN.md
+        section 4).  Small tiny-LM configs use period == n_layers so every
+        layer is searched independently, matching the paper's regime.
+        """
+        cfg = self.cfg
+        R = cfg.n_repeat
+        toks = seq_len * batch
+        layers = []
+
+        def add(name, path, c_in, c_out, macs, numel, axis, kind="linear"):
+            n_groups = min(max_groups, c_out)
+            layers.append(LayerInfo(
+                name=name, kind=kind, c_in=c_in, c_out=c_out, k=1, stride=1,
+                macs=float(macs), numel=int(numel), param_path=path,
+                channel_axis=axis, n_groups=n_groups))
+
+        d, hd = cfg.d_model, cfg.hdim
+        for p_idx, bdef in enumerate(cfg.pattern):
+            pre = ("blocks", p_idx)
+            nm = f"p{p_idx}"
+            if bdef.kind in ("attn", "local_attn", "cross_attn"):
+                qd, kvd = cfg.n_heads * hd, cfg.n_kv_heads * hd
+                add(f"{nm}.wq", pre + ("wq",), d, qd, R * toks * d * qd,
+                    R * d * qd, -1)
+                kv_toks = cfg.n_img_tokens * batch \
+                    if bdef.kind == "cross_attn" else toks
+                add(f"{nm}.wk", pre + ("wk",), d, kvd, R * kv_toks * d * kvd,
+                    R * d * kvd, -1)
+                add(f"{nm}.wv", pre + ("wv",), d, kvd, R * kv_toks * d * kvd,
+                    R * d * kvd, -1)
+                add(f"{nm}.wo", pre + ("wo",), qd, d, R * toks * qd * d,
+                    R * qd * d, -1)
+            else:
+                s = cfg.ssm
+                di = s.d_inner(d)
+                add(f"{nm}.w_xz", pre + ("mamba", "w_xz"), d, 2 * di,
+                    R * toks * d * 2 * di, R * d * 2 * di, -1)
+                add(f"{nm}.w_bc", pre + ("mamba", "w_bc"), d, 2 * s.d_state,
+                    R * toks * d * 2 * s.d_state, R * d * 2 * s.d_state, -1)
+                add(f"{nm}.w_out", pre + ("mamba", "w_out"), di, d,
+                    R * toks * di * d, R * di * d, -1)
+            if bdef.has_ffn:
+                if bdef.use_moe:
+                    m = cfg.moe
+                    eff_toks = toks * m.top_k / m.n_experts
+                    for site, cin, cout in (("wg", d, m.d_ff),
+                                            ("wu", d, m.d_ff),
+                                            ("wd", m.d_ff, d)):
+                        add(f"{nm}.{site}", pre + (site,), cin, cout,
+                            R * m.n_experts * eff_toks * cin * cout,
+                            R * m.n_experts * cin * cout, -1, kind="expert")
+                else:
+                    add(f"{nm}.wg", pre + ("wg",), d, cfg.d_ff,
+                        R * toks * d * cfg.d_ff, R * d * cfg.d_ff, -1)
+                    add(f"{nm}.wu", pre + ("wu",), d, cfg.d_ff,
+                        R * toks * d * cfg.d_ff, R * d * cfg.d_ff, -1)
+                    add(f"{nm}.wd", pre + ("wd",), cfg.d_ff, d,
+                        R * toks * cfg.d_ff * d, R * cfg.d_ff * d, -1)
+        add("unembed", ("unembed",), d, cfg.vocab_padded,
+            toks * d * cfg.vocab_padded, d * cfg.vocab_padded, -1,
+            kind="unembed")
+        return QuantizableGraph(layers=layers)

@@ -1,0 +1,5 @@
+"""Optimizers in pure JAX (no optax offline)."""
+from repro.optim.adam import AdamW
+from repro.optim.schedule import cosine_warmup
+
+__all__ = ["AdamW", "cosine_warmup"]

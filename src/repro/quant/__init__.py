@@ -1,0 +1,46 @@
+"""Quantization substrate: linear per-channel quantization, multi-bit
+binarization, policy containers, and policy application.
+
+This package implements the two compression back-ends the paper searches over:
+
+* linear (uniform symmetric) quantization [Zhou et al., INQ] with a bit-width
+  (QBN) per weight output channel, 0 = channel pruned, >=32 = full precision;
+* multi-bit binarization [Lin et al., ABC-Net-style]: W ~= sum_m alpha_m B_m
+  with B_m in {-1,+1}, BBN planes per channel.
+"""
+from repro.quant.linear_quant import (
+    fake_quant,
+    fake_quant_per_channel,
+    ste_fake_quant,
+    quant_pack_int8,
+)
+from repro.quant.binarize import binarize_residual, fake_binarize_per_channel
+from repro.quant.policy import (
+    Granularity,
+    QuantMode,
+    QuantPolicy,
+    LayerInfo,
+    QuantizableGraph,
+)
+from repro.quant.apply import (
+    apply_policy_to_params,
+    quantize_activation,
+    policy_metrics,
+)
+
+__all__ = [
+    "fake_quant",
+    "fake_quant_per_channel",
+    "ste_fake_quant",
+    "quant_pack_int8",
+    "binarize_residual",
+    "fake_binarize_per_channel",
+    "Granularity",
+    "QuantMode",
+    "QuantPolicy",
+    "LayerInfo",
+    "QuantizableGraph",
+    "apply_policy_to_params",
+    "quantize_activation",
+    "policy_metrics",
+]

@@ -1,0 +1,93 @@
+"""Apply a QuantPolicy to a parameter pytree / to activations.
+
+Weights are fake-quantized once per candidate policy (outside the forward);
+activations are quantized inside the forward via :func:`quantize_activation`,
+which models consult through a ``quant_ctx`` dict threaded into ``apply``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.binarize import fake_binarize_per_channel
+from repro.quant.linear_quant import fake_quant, fake_quant_per_channel
+from repro.quant.policy import QuantMode, QuantPolicy, QuantizableGraph
+
+
+def _get_path(tree: Any, path):
+    node = tree
+    for key in path:
+        node = node[key]
+    return node
+
+
+def _set_path(tree: Any, path, value):
+    """Functionally set ``tree[path] = value`` for nested dicts/tuples."""
+    if not path:
+        return value
+    key = path[0]
+    if isinstance(tree, (tuple, list)):
+        items = list(tree)
+        items[key] = _set_path(tree[key], path[1:], value)
+        return type(tree)(items)
+    new = dict(tree)
+    new[key] = _set_path(tree[key], path[1:], value)
+    return new
+
+
+def apply_policy_to_params(params: Any, graph: QuantizableGraph,
+                           policy: QuantPolicy) -> Any:
+    """Return a new params pytree with every searched weight fake-quantized.
+
+    Works for stacked (scan) layouts too: if the stored weight has one more
+    leading dim than the LayerInfo expects, the quantizer broadcasts over it
+    (per-channel scales are then per (stack, channel)).
+    """
+    out = params
+    for layer in graph.layers:
+        w = _get_path(params, layer.param_path)
+        bits = jnp.asarray(policy.expand_weight_bits(layer))
+        axis = layer.channel_axis
+        if policy.mode == QuantMode.QUANT:
+            qw = fake_quant_per_channel(w, bits, axis=axis)
+        else:
+            qw = fake_binarize_per_channel(w, bits, axis=axis).astype(w.dtype)
+        out = _set_path(out, layer.param_path, qw)
+    return out
+
+
+def quantize_activation(x: jnp.ndarray, quant_ctx: Dict[str, Any] | None,
+                        name: str) -> jnp.ndarray:
+    """Activation fake-quant hook used inside model forwards.
+
+    ``quant_ctx`` maps layer name -> activation bits (scalar); missing name or
+    None ctx means full precision.  Activation quantization is per-tensor
+    (the paper assigns one QBN to all activation channels of an FC layer).
+    """
+    if quant_ctx is None:
+        return x
+    bits = quant_ctx.get(name)
+    if bits is None:
+        return x
+    return fake_quant(x, bits, axis=None)
+
+
+def policy_metrics(graph: QuantizableGraph, policy: QuantPolicy,
+                   full_bits: float = 32.0) -> Dict[str, float]:
+    """NetScore ingredients for a policy: p(N), m(N) and reduction ratios."""
+    logic_full = graph.total_macs * full_bits * full_bits
+    logic = policy.logic_ops(graph)
+    size_full = graph.total_numel * full_bits
+    size = policy.model_size_bits(graph)
+    return {
+        "avg_weight_bits": policy.avg_weight_bits(graph),
+        "avg_act_bits": policy.avg_act_bits(graph),
+        "logic_ops": logic,
+        "logic_ratio": logic / max(logic_full, 1.0),
+        "model_bits": size,
+        "size_ratio": size / max(size_full, 1.0),
+        "p": policy.avg_weight_bits(graph) / full_bits,
+        "m": logic,
+    }

@@ -1,0 +1,94 @@
+"""Multi-bit binarization: W ~= sum_m alpha_m B_m, B_m in {-1, +1}.
+
+Implements the paper's binarization back-end [Lin et al. 2017 style]: greedy
+residual binarization (B_m = sign(R_m), alpha_m = E|R_m|) followed by a joint
+least-squares refit of the alphas, per output channel.  ``bits = 0`` prunes a
+channel; bit-widths are capped at ``MAX_PLANES`` (an 8-plane expansion already
+recovers ~all of the signal for weight tensors; the search space above that is
+handled by the linear quantizer).
+
+On TPU there is no XNOR/popcount datapath (DESIGN.md section 7); the deployment
+form of a binarized matmul is the *bit-plane matmul* y = sum_m alpha_m (x @ B_m)
+with B_m stored packed (1 bit/plane) and lifted to int8 sign matrices for the
+MXU -- see kernels/binary_matmul.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MAX_PLANES = 8
+
+
+def binarize_residual(w: jnp.ndarray, planes: int, axis: int = -1):
+    """Greedy residual binarization with a joint per-channel alpha refit.
+
+    Args:
+      w: weight tensor.
+      planes: number of binary planes (static python int, >= 1).
+      axis: channel axis; alphas are fit per channel along this axis.
+
+    Returns:
+      (B, alpha): B int8 {-1,+1} of shape (planes, *w.shape); alpha f32 of
+      shape (planes, *broadcast_shape) where broadcast_shape is 1 everywhere
+      except the channel axis.
+    """
+    planes = int(planes)
+    w = jnp.asarray(w, jnp.float32)
+    axis_ = axis % w.ndim
+    red = tuple(d for d in range(w.ndim) if d != axis_)
+
+    bs, r = [], w
+    for _ in range(planes):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=red, keepdims=True)
+        r = r - a * b
+        bs.append(b)
+    B = jnp.stack(bs)  # (m, ...)
+
+    # Joint least-squares refit per channel: solve (B B^T) a = B w.
+    m = planes
+    c = w.shape[axis_]
+    wt = jnp.moveaxis(w, axis_, 0).reshape(c, -1)          # (c, k)
+    Bt = jnp.moveaxis(B, axis_ + 1, 1).reshape(m, c, -1)   # (m, c, k)
+    G = jnp.einsum("mck,nck->cmn", Bt, Bt)                 # (c, m, m)
+    rhs = jnp.einsum("mck,ck->cm", Bt, wt)                 # (c, m)
+    a = jnp.linalg.solve(G + 1e-6 * jnp.eye(m), rhs[..., None])[..., 0]  # (c, m)
+
+    shape = [1] * w.ndim
+    shape[axis_] = c
+    alpha = jnp.stack([a[:, i].reshape(shape) for i in range(m)])
+    return B.astype(jnp.int8), alpha.astype(jnp.float32)
+
+
+def reconstruct(B: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """sum_m alpha_m B_m."""
+    return jnp.sum(alpha * B.astype(jnp.float32), axis=0)
+
+
+def fake_binarize_per_channel(w: jnp.ndarray, bits_per_channel, axis: int = -1):
+    """Binarize-dequantize with a *vector* of per-channel plane counts.
+
+    Channels with bits 0 are pruned; bits are clipped to [0, MAX_PLANES].  The
+    expansion always runs MAX_PLANES greedy planes and masks plane m off for
+    channels whose BBN <= m, so a single trace handles heterogeneous BBNs
+    (the kernel-wise regime the agent searches).  The greedy residual update is
+    unconditional -- only the accumulation is masked -- which makes a channel's
+    reconstruction at BBN=b identical to the b-plane greedy expansion.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    axis_ = axis % w.ndim
+    red = tuple(d for d in range(w.ndim) if d != axis_)
+    shape = [1] * w.ndim
+    shape[axis_] = w.shape[axis_]
+    bits = jnp.clip(jnp.asarray(bits_per_channel, jnp.float32).reshape(shape),
+                    0.0, float(MAX_PLANES))
+
+    out = jnp.zeros_like(w)
+    r = w
+    for mplane in range(MAX_PLANES):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=red, keepdims=True)
+        contrib = a * b
+        out = out + jnp.where(bits > (mplane + 0.5), contrib, 0.0)
+        r = r - contrib
+    return out

@@ -1,0 +1,108 @@
+"""Linear (uniform, symmetric) quantization with per-channel bit-widths.
+
+The paper's quantizer: a weight output channel with QBN ``b`` is mapped onto the
+integer grid {-(2^(b-1)-1), ..., 2^(b-1)-1} with a per-channel scale
+``s = amax / (2^(b-1)-1)``.  ``b = 0`` prunes the channel, ``b >= FULL_BITS``
+is a pass-through (full precision).  All functions are jit-safe and accept
+*vector* bit-widths so a single call fake-quantizes a tensor whose channels
+carry different QBNs -- the kernel-wise regime AutoQ searches over.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Bit-widths at or above this behave as full precision (f32 mantissa is 24
+# bits; >=24-bit fixed point is indistinguishable for our purposes).
+FULL_BITS = 24
+
+
+def _levels(bits: jnp.ndarray) -> jnp.ndarray:
+    """Number of positive quantization levels for signed symmetric quant."""
+    bits = jnp.asarray(bits, jnp.float32)
+    return jnp.maximum(2.0 ** (bits - 1.0) - 1.0, 1.0)
+
+
+def fake_quant(x: jnp.ndarray, bits, axis: int | None = None) -> jnp.ndarray:
+    """Quantize-dequantize ``x`` at ``bits`` (scalar or per-channel vector).
+
+    Args:
+      x: tensor to quantize.
+      bits: scalar, or vector of shape ``x.shape[axis]`` with per-channel QBNs.
+      axis: channel axis for per-channel scales (None -> per-tensor).
+    """
+    x = jnp.asarray(x)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(xf))
+        b = jnp.asarray(bits, jnp.float32)
+    else:
+        axis = axis % xf.ndim
+        red = tuple(d for d in range(xf.ndim) if d != axis)
+        amax = jnp.max(jnp.abs(xf), axis=red, keepdims=True)
+        b = jnp.asarray(bits, jnp.float32)
+        if b.ndim > 0:  # per-channel vector -> broadcastable shape
+            shape = [1] * xf.ndim
+            shape[axis] = xf.shape[axis]
+            b = b.reshape(shape)
+    lv = _levels(b)
+    scale = jnp.where(amax > 0, amax / lv, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -lv, lv) * scale
+    out = jnp.where(b <= 0.5, 0.0, jnp.where(b >= FULL_BITS, xf, q))
+    return out.astype(dtype)
+
+
+def fake_quant_per_channel(w: jnp.ndarray, bits_per_channel, axis: int = -1):
+    """Per-output-channel fake quantization (the paper's weight quantizer)."""
+    return fake_quant(w, bits_per_channel, axis=axis)
+
+
+@jax.custom_vjp
+def ste_fake_quant(x: jnp.ndarray, bits: jnp.ndarray, axis: int):
+    """Fake quant with a straight-through gradient estimator (QAT forward)."""
+    return fake_quant(x, bits, axis=axis)
+
+
+def _ste_fwd(x, bits, axis):
+    return fake_quant(x, bits, axis=axis), None
+
+
+def _ste_bwd(_, g):
+    return (g, None, None)
+
+
+ste_fake_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+def quant_pack_int8(w: jnp.ndarray, bits, axis: int = -1):
+    """Quantize to a *stored* int8 representation + per-channel f32 scales.
+
+    This is the deployment path (what the Pallas ``quant_matmul`` kernel
+    consumes): channels with QBN in [1, 8] round to int8 on their own grid,
+    QBN 0 stores zeros, QBN > 8 falls back to the bf16 path at a higher layer
+    (the packer clamps to 8 and the caller tracks the overflow set).
+
+    Returns (q_int8, scale, eff_bits) with ``scale`` shaped like the channel
+    axis and broadcastable against ``q``.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    axis = axis % w.ndim
+    red = tuple(d for d in range(w.ndim) if d != axis)
+    amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    b = jnp.asarray(bits, jnp.float32)
+    if b.ndim > 0:
+        shape = [1] * w.ndim
+        shape[axis] = w.shape[axis]
+        b = b.reshape(shape)
+    b = jnp.clip(b, 0.0, 8.0)
+    lv = _levels(b)
+    scale = jnp.where(amax > 0, amax / lv, 1.0)
+    q = jnp.clip(jnp.round(w / scale), -lv, lv)
+    q = jnp.where(b <= 0.5, 0.0, q)
+    return q.astype(jnp.int8), scale.astype(jnp.float32), b
+
+
+def dequant_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quant_pack_int8` (reference; kernel fuses this)."""
+    return q.astype(jnp.float32) * scale

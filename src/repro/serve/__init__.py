@@ -1,0 +1,4 @@
+"""Serving substrate: batched prefill/decode engine with quantized weights."""
+from repro.serve.engine import ServeEngine
+
+__all__ = ["ServeEngine"]

@@ -1,0 +1,1 @@
+"""Distribution substrate: sharding context, partition specs, collectives."""

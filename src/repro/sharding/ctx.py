@@ -1,0 +1,51 @@
+"""Ambient sharding context.
+
+Model code calls ``constrain(x, role)`` at block boundaries; outside a mesh
+context this is a no-op, inside one it applies the PartitionSpec registered
+for that role.  This keeps model code mesh-agnostic while letting the launcher
+pin the activation layout GSPMD propagates from.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, P]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh, rules: Dict[str, P]):
+    """Activate activation-sharding rules for model code under this context."""
+    prev_r, prev_m = _rules(), _mesh()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_r, prev_m
+
+
+def constrain(x, role: str):
+    rules, mesh = _rules(), _mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = rules.get(role)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh():
+    """The ambient mesh, or None outside a sharding_rules context."""
+    return _mesh()

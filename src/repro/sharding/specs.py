@@ -1,0 +1,230 @@
+"""Partition specs for params / optimizer state / batches / caches.
+
+Layout (DESIGN.md section 5):
+* every 2-D+ weight is sharded FSDP x TP: contraction/input dim over "data"
+  (ZeRO-3 resharding; GSPMD inserts the all-gathers at use), output dim over
+  "model" (Megatron TP).  Row-parallel partners (wo, wd) are transposed.
+* MoE expert dim shards over "data" (EP) when divisible -- expert weights
+  then never gather; token routing becomes the collective instead.
+* the "pod" axis is pure DP: params/opt replicated across pods, batch split.
+* decode KV caches shard batch over "data" and sequence over "model"
+  (flash-decode style); long_500k (batch=1) shards sequence over both.
+
+Every dim is sharded only when divisible by the axis size; otherwise that dim
+falls back to replication (never an invalid spec).  `spec_for` is
+path+shape-driven so it works for any pytree the models produce.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.api import LMConfig
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _fit(dim: int, size: int, axis: str) -> Optional[str]:
+    return axis if size > 1 and dim % size == 0 else None
+
+
+def _path_str(path) -> str:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return "/".join(out)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh,
+               cfg: Optional[LMConfig] = None) -> P:
+    """PartitionSpec for one parameter by its tree path + shape."""
+    dsz, msz = _axis_size(mesh, "data"), _axis_size(mesh, "model")
+    nd = len(shape)
+    leaf = path.rsplit("/", 1)[-1]
+    if leaf == "q":                 # int8 serving weight: use base rules
+        return param_spec(path.rsplit("/", 1)[0], shape, mesh, cfg)
+    if leaf == "s" and path.count("/"):  # its scale tensor: replicate
+        return P()
+    if nd <= 1:
+        return P()
+
+    # --- embedding / unembedding ---
+    if leaf == "embed":
+        return P(_fit(shape[0], msz, "model"), _fit(shape[1], dsz, "data"))
+    if leaf == "unembed":
+        return P(_fit(shape[0], dsz, "data"), _fit(shape[1], msz, "model"))
+
+    stacked = "blocks/" in path or path.startswith("blocks")
+    lead = 1 if stacked else 0     # skip the n_repeat stack dim
+
+    # --- MoE expert tensors (R, E, in, out) ---
+    if nd - lead == 3 and leaf in ("wg", "wu", "wd"):
+        e, i, o = shape[lead], shape[lead + 1], shape[lead + 2]
+        if cfg is not None and cfg.moe is not None and \
+                cfg.moe.local_dispatch:
+            # small-expert local dispatch: replicate over DP, TP on ff
+            if leaf == "wd":
+                return P(*(((None,) * lead) +
+                           (None, _fit(i, msz, "model"), None)))
+            return P(*(((None,) * lead) +
+                       (None, None, _fit(o, msz, "model"))))
+        e_ax = _fit(e, dsz, "data")
+        if leaf == "wd":   # row-parallel: contraction (ff) over model
+            i_ax = _fit(i, msz, "model")
+            o_ax = None if e_ax else _fit(o, dsz, "data")
+        else:
+            i_ax = None if e_ax else _fit(i, dsz, "data")
+            o_ax = _fit(o, msz, "model")
+        spec = (e_ax, i_ax, o_ax)
+        return P(*(((None,) * lead) + spec))
+
+    # --- plain 2-D matmul weights (R, in, out) ---
+    if nd - lead == 2:
+        i, o = shape[lead], shape[lead + 1]
+        if leaf in ("wo", "wd", "w_out"):      # row-parallel
+            spec = (_fit(i, msz, "model"), _fit(o, dsz, "data"))
+        elif leaf == "router":                 # tiny; keep E replicated
+            spec = (_fit(i, dsz, "data"), None)
+        else:                                  # column-parallel default
+            spec = (_fit(i, dsz, "data"), _fit(o, msz, "model"))
+        return P(*(((None,) * lead) + spec))
+
+    # conv kernels (R, K, di) and other 3-D non-MoE: shard last dim on model
+    if nd - lead == 2 + 1 and leaf == "conv_w":
+        return P(*(((None,) * lead) + (None, _fit(shape[-1], msz, "model"))))
+    if nd >= 2:
+        spec = [None] * nd
+        spec[-1] = _fit(shape[-1], msz, "model")
+        spec[-2] = _fit(shape[-2], dsz, "data")
+        return P(*spec)
+    return P()
+
+
+def param_specs(params_shape: Any, mesh, cfg: Optional[LMConfig] = None):
+    """Pytree of PartitionSpec matching a params (shape) pytree."""
+    def one(path, leaf):
+        return param_spec(_path_str(path), leaf.shape, mesh, cfg)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def opt_specs(opt_shape: Any, pspecs: Any, mesh):
+    """Optimizer-state specs: moments inherit the param spec; 8-bit scale
+    tensors (param.shape[:-1] + (1,)) inherit the spec minus the last axis."""
+    def from_param(ps: P, shape) -> P:
+        names = list(ps) + [None] * (len(shape) - len(ps))
+        names = names[: len(shape)]
+        # last dim of the scale tensor is 1 -> cannot stay sharded
+        if shape and shape[-1] == 1:
+            names[-1] = None
+        return P(*names)
+
+    m = opt_shape["m"]
+
+    def map_state(sub):
+        def one(path, leaf):
+            p = _path_str(path)
+            # path looks like <param_path>(/q|/s)?
+            for suffix in ("/q", "/s"):
+                if p.endswith(suffix):
+                    p = p[: -len(suffix)]
+                    break
+            ps = _lookup(pspecs, p)
+            return from_param(ps if ps is not None else P(), leaf.shape)
+        return jax.tree_util.tree_map_with_path(one, sub)
+
+    return {"m": map_state(opt_shape["m"]), "v": map_state(opt_shape["v"]),
+            "t": P()}
+
+
+def _lookup(tree, path_str: str):
+    node = tree
+    for k in path_str.split("/"):
+        if isinstance(node, (dict,)):
+            if k not in node:
+                return None
+            node = node[k]
+        elif isinstance(node, (tuple, list)):
+            node = node[int(k)]
+        else:
+            return None
+    return node if isinstance(node, P) else None
+
+
+def batch_specs(batch_shape: Any, mesh) -> Any:
+    """Token batches: batch dim over (pod, data) when divisible."""
+    pods = _axis_size(mesh, "pod")
+    dsz = _axis_size(mesh, "data")
+
+    def one(leaf):
+        b = leaf.shape[0]
+        if pods > 1 and b % (pods * dsz) == 0:
+            ax = ("pod", "data")
+        elif b % dsz == 0 and dsz > 1:
+            ax = "data"
+        else:
+            ax = None
+        return P(*((ax,) + (None,) * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Any, cfg: LMConfig, mesh, long_context: bool):
+    """Decode/prefill cache specs.
+
+    Stacked attn caches: (R, B, S, Hkv, hd) -> B over data, S over model;
+    long-context (B not divisible): S over (data, model).
+    Mamba states: (R, B, H, P, N) -> B over data, H over model.
+    Cross-attn:   (R, B, Si, Hkv, hd) -> B over data, Si over model.
+    """
+    dsz, msz = _axis_size(mesh, "data"), _axis_size(mesh, "model")
+
+    def one(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        leafname = p.rsplit("/", 1)[-1]
+        if leafname in ("k", "v") and nd == 5:
+            _, b, s, hkv, hd = leaf.shape
+            if long_context or (dsz > 1 and b % dsz != 0):
+                seq_ax = ("data", "model") if s % (dsz * msz) == 0 else \
+                    _fit(s, msz, "model")
+                return P(None, None, seq_ax, None, None)
+            return P(None, _fit(b, dsz, "data"), _fit(s, msz, "model"),
+                     None, None)
+        if leafname in ("pos", "k_s", "v_s") and nd in (3, 4):
+            _, b, s = leaf.shape[:3]
+            rest = (None,) * (nd - 3)
+            if long_context or (dsz > 1 and b % dsz != 0):
+                seq_ax = ("data", "model") if s % (dsz * msz) == 0 else \
+                    _fit(s, msz, "model")
+                return P(None, None, seq_ax, *rest)
+            return P(None, _fit(b, dsz, "data"), _fit(s, msz, "model"),
+                     *rest)
+        if leafname == "state" and nd == 5:    # (R, B, H, P, N)
+            _, b, h, _, _ = leaf.shape
+            return P(None, _fit(b, dsz, "data"), _fit(h, msz, "model"),
+                     None, None)
+        if leafname == "conv" and nd == 4:     # (R, B, K-1, di)
+            _, b, _, di = leaf.shape
+            return P(None, _fit(b, dsz, "data"), None,
+                     _fit(di, msz, "model"))
+        spec = [None] * nd
+        if nd >= 2:
+            spec[1] = _fit(leaf.shape[1], dsz, "data")
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def to_named(tree_of_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,5 @@
+"""Training substrate: loop, checkpointing, fault tolerance, QAT."""
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import Trainer, TrainConfig
+
+__all__ = ["CheckpointManager", "Trainer", "TrainConfig"]

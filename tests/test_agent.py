@@ -1,0 +1,102 @@
+"""DDPG / hierarchical agent / Algorithm-1 bounder tests."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bound import LayerBounder
+from repro.core.ddpg import ACTION_SCALE, DDPG, DDPGConfig, ReplayBuffer
+from repro.quant.policy import LayerInfo, QuantizableGraph
+
+
+def _graph(n_layers=4, macs=1000.0):
+    layers = [LayerInfo(name=f"l{i}", kind="linear", c_in=8, c_out=8, k=1,
+                        stride=1, macs=macs, numel=64,
+                        param_path=(f"l{i}",), channel_axis=1, n_groups=4)
+              for i in range(n_layers)]
+    return QuantizableGraph(layers=layers)
+
+
+def test_replay_buffer_ring():
+    buf = ReplayBuffer(3, 1, size=5)
+    for i in range(8):
+        buf.push(np.full(3, i), [i], i, np.full(3, i + 1), False)
+    assert len(buf) == 5
+    batch = buf.sample(np.random.default_rng(0), 4)
+    assert batch["s"].shape == (4, 3)
+    assert set(np.unique(batch["r"])) <= {3., 4., 5., 6., 7.}
+
+
+def test_ddpg_actions_in_range():
+    agent = DDPG(DDPGConfig(state_dim=4, action_dim=2), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    for noise in (0.0, 0.5, 2.0):
+        a = agent.act(np.zeros(4, np.float32), noise, rng)
+        assert a.shape == (2,)
+        assert (a >= 0).all() and (a <= ACTION_SCALE).all()
+
+
+def test_ddpg_learns_simple_qtarget():
+    """Critic loss decreases on a stationary synthetic problem."""
+    agent = DDPG(DDPGConfig(state_dim=3, action_dim=1, gamma=0.0),
+                 jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    s = rng.normal(size=(64, 3)).astype(np.float32)
+    a = rng.uniform(0, 32, size=(64, 1)).astype(np.float32)
+    r = -(a[:, 0] - 16.0) ** 2 / 64.0      # optimum at a=16
+    batch = {"s": s, "a": a, "r": r, "s2": s,
+             "done": np.ones(64, np.float32)}
+    first = agent.update(batch)["critic_loss"]
+    for _ in range(200):
+        last = agent.update(batch)["critic_loss"]
+    assert last < first * 0.5
+    act = agent.act(s[0], 0.0, rng)[0]
+    assert 8.0 < act < 24.0               # pulled toward the optimum
+
+
+def test_layer_bounder_enforces_budget():
+    g = _graph(4)
+    b = LayerBounder(g, avg_bits_w=4.0, avg_bits_a=4.0, g_min=1.0)
+    total_logic = sum(l.macs for l in g.layers)
+    budget = total_logic * (4 / 32) * (4 / 32)
+    # greedy HLC asking for max bits every layer must still fit the budget
+    spent = 0.0
+    for t, layer in enumerate(g.layers):
+        gw, ga = b.bound_pair(t, 32.0, 32.0)
+        spent += (gw / 32) * (ga / 32) * layer.macs
+    assert spent <= budget * 1.05 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(target=st.floats(2.0, 16.0), asks=st.lists(
+    st.tuples(st.floats(0, 32), st.floats(0, 32)), min_size=4, max_size=4))
+def test_layer_bounder_budget_property(target, asks):
+    g = _graph(4)
+    b = LayerBounder(g, avg_bits_w=target, avg_bits_a=target, g_min=1.0)
+    spent = 0.0
+    for t, (gw_ask, ga_ask) in enumerate(asks):
+        gw, ga = b.bound_pair(t, gw_ask, ga_ask)
+        assert 1.0 <= gw <= 32.0 and 1.0 <= ga <= 32.0
+        spent += (gw / 32) * (ga / 32) * g.layers[t].macs
+    budget = sum(l.macs for l in g.layers) * (target / 32) ** 2
+    # min-goal floor may exceed tiny budgets; allow the g_min floor term
+    floor = sum(l.macs for l in g.layers) * (1 / 32) ** 2
+    assert spent <= max(budget, floor) * 1.2 + 1e-6
+
+
+def test_var_ordering_projection():
+    from repro.core.env import QuantEnv
+    import jax.numpy as jnp
+    from repro.core.reward import RewardCfg
+
+    g = _graph(1)
+    params = {"l0": jnp.asarray(
+        np.random.default_rng(0).normal(size=(8, 8)) *
+        np.asarray([0.1, 0.1, 1, 1, 2, 2, 4, 4]))}
+    env = QuantEnv(g, params, lambda p: 50.0, RewardCfg.accuracy_guaranteed())
+    actions = np.array([7.0, 1.0, 5.0, 3.0])
+    out = env.apply_var_ordering(g.layers[0], actions)
+    var = env.group_vars["l0"]
+    order = np.argsort(var)
+    assert sorted(out.tolist()) == sorted(actions.tolist())  # same multiset
+    assert all(out[order][i] <= out[order][i + 1] for i in range(3))

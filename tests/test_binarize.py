@@ -1,0 +1,70 @@
+"""Multi-bit binarization tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.binarize import (binarize_residual, fake_binarize_per_channel,
+                                  reconstruct)
+
+RNG = np.random.default_rng(7)
+
+
+def test_error_decreases_with_planes():
+    w = jnp.asarray(RNG.normal(size=(64, 32)).astype(np.float32))
+    errs = []
+    for m in (1, 2, 4, 8):
+        B, a = binarize_residual(w, m, axis=1)
+        errs.append(float(jnp.mean((w - reconstruct(B, a)) ** 2)))
+    assert all(x > y for x, y in zip(errs, errs[1:]))
+
+
+def test_single_plane_is_scaled_sign():
+    w = jnp.asarray(RNG.normal(size=(16, 4)).astype(np.float32))
+    B, a = binarize_residual(w, 1, axis=1)
+    assert set(np.unique(np.asarray(B))) <= {-1, 1}
+    assert np.all(np.asarray(a) > 0)
+
+
+def test_refit_not_worse_than_greedy():
+    """The joint LS alpha refit can only improve on greedy alphas."""
+    w = jnp.asarray(RNG.normal(size=(64, 8)).astype(np.float32))
+    m = 4
+    # greedy
+    r, greedy = w, jnp.zeros_like(w)
+    for _ in range(m):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=0, keepdims=True)
+        greedy = greedy + a * b
+        r = r - a * b
+    B, alpha = binarize_residual(w, m, axis=1)
+    e_refit = float(jnp.mean((w - reconstruct(B, alpha)) ** 2))
+    e_greedy = float(jnp.mean((w - greedy) ** 2))
+    assert e_refit <= e_greedy + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), planes=st.integers(0, 8))
+def test_fake_binarize_matches_greedy_truncation(seed, planes):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(24, 6)).astype(np.float32))
+    out = fake_binarize_per_channel(w, jnp.full(6, float(planes)), axis=1)
+    # greedy reference
+    r, ref = w, jnp.zeros_like(w)
+    for _ in range(planes):
+        b = jnp.where(r >= 0, 1.0, -1.0)
+        a = jnp.mean(jnp.abs(r), axis=0, keepdims=True)
+        ref = ref + a * b
+        r = r - a * b
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_heterogeneous_plane_counts():
+    # identical data in every channel so per-channel errors are comparable
+    col = RNG.normal(size=(32, 1)).astype(np.float32)
+    w = jnp.asarray(np.repeat(col, 4, axis=1))
+    bits = jnp.asarray([0.0, 1.0, 4.0, 8.0])
+    out = fake_binarize_per_channel(w, bits, axis=1)
+    assert bool(jnp.all(out[:, 0] == 0))
+    errs = [float(jnp.mean((w[:, i] - out[:, i]) ** 2)) for i in (1, 2, 3)]
+    assert errs[0] > errs[1] > errs[2]

@@ -1,0 +1,68 @@
+"""Checkpoint manager tests: atomic roundtrip, bf16/int8, keep-k, elastic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def _tree(key):
+    return {
+        "a": jax.random.normal(key, (4, 8)),
+        "blocks": ({"w": jax.random.normal(key, (2, 3)).astype(jnp.bfloat16)},
+                   {"w": jnp.arange(6, dtype=jnp.int8).reshape(2, 3)}),
+        "t": jnp.int32(7),
+    }
+
+
+def test_roundtrip_all_dtypes(tmp_path, key):
+    cm = CheckpointManager(tmp_path, keep=2)
+    tree = _tree(key)
+    cm.save(5, tree, extra={"note": "hi"})
+    like = jax.eval_shape(lambda: tree)
+    step, restored, extra = cm.restore(like)
+    assert step == 5 and extra["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_k_gc(tmp_path, key):
+    cm = CheckpointManager(tmp_path, keep=2)
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 2, 3, 4):
+        cm.save(s, tree)
+    assert cm.all_steps() == [3, 4]
+    assert cm.latest_step() == 4
+
+
+def test_restore_shape_mismatch_raises(tmp_path, key):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, {"x": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        cm.restore({"x": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_restore_missing_leaf_raises(tmp_path, key):
+    cm = CheckpointManager(tmp_path)
+    cm.save(1, {"x": jnp.zeros((3,))})
+    with pytest.raises(KeyError):
+        cm.restore({"y": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+def test_elastic_restore_with_shardings(tmp_path, key):
+    """Restore onto explicit (degenerate 1x1 mesh) shardings -- the elastic
+    re-mesh path: logical layout is mesh-independent."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    cm = CheckpointManager(tmp_path)
+    tree = {"w": jax.random.normal(key, (8, 4))}
+    cm.save(3, tree)
+    mesh = make_host_mesh()
+    sh = {"w": NamedSharding(mesh, P("data", "model"))}
+    step, restored, _ = cm.restore(jax.eval_shape(lambda: tree), shardings=sh)
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(restored["w"]))
+    assert restored["w"].sharding == sh["w"]

@@ -1,0 +1,43 @@
+"""Synthetic data pipeline: determinism + learnability signal."""
+import numpy as np
+
+from repro.data import SyntheticImages, TokenStream
+
+
+def test_images_deterministic():
+    d = SyntheticImages(img_size=8, seed=3)
+    b1, b2 = d.batch(17, 16), d.batch(17, 16)
+    np.testing.assert_array_equal(b1["x"], b2["x"])
+    np.testing.assert_array_equal(b1["y"], b2["y"])
+    b3 = d.batch(18, 16)
+    assert not np.array_equal(b1["x"], b3["x"])
+
+
+def test_images_classes_separable():
+    """Class prototypes dominate noise enough to be learnable: a nearest-
+    prototype classifier should beat chance by a wide margin."""
+    d = SyntheticImages(img_size=8, seed=0)
+    protos = d._protos()
+    b = d.batch(0, 256)
+    flat = b["x"].reshape(256, -1)
+    pf = protos.reshape(10, -1)
+    pred = np.argmax(flat @ pf.T, axis=1)
+    assert (pred == b["y"]).mean() > 0.5
+
+
+def test_tokens_deterministic_and_structured():
+    t = TokenStream(vocab=64, seed=1)
+    b1 = t.batch(5, 8, 32)
+    b2 = t.batch(5, 8, 32)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 32)
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+    # deterministic structure: >= 60% of transitions follow the affine rule
+    toks, labs = b1["tokens"], b1["labels"]
+    hits = 0
+    for a in (1, 3, 5, 7):
+        for bb in range(64):
+            pred = (a * toks + bb) % 64
+            hits = max(hits, (pred == labs).mean(axis=1).max())
+    assert hits > 0.6

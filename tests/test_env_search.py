@@ -1,0 +1,106 @@
+"""QuantEnv + search integration (tiny budgets; the full 400-episode runs
+live in benchmarks/ and EXPERIMENTS.md)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (FlatAgent, HierarchicalAgent, LayerBounder, QuantEnv,
+                        RewardCfg, make_cnn_evaluator, make_lm_evaluator,
+                        run_search)
+from repro.configs import ARCHS
+from repro.data import SyntheticImages, TokenStream
+from repro.models import LM
+from repro.models.cnn import CNN, CNNConfig
+from repro.quant.policy import QuantMode, QuantPolicy
+
+KEY = jax.random.PRNGKey(0)
+CNN_CFG = CNNConfig(name="t", img_size=8, channels=(8, 16), pool_after=(0,))
+
+
+def _cnn_env(reward=None, mode=QuantMode.QUANT, bounder=None):
+    model = CNN(CNN_CFG)
+    params = model.init(KEY)
+    val = SyntheticImages(img_size=8).batch(999, 64)
+    graph = model.graph()
+    ev = make_cnn_evaluator(model, params, graph, val, mode=mode)
+    b = LayerBounder(graph, 5.0, 5.0) if bounder else None
+    return QuantEnv(graph, params, ev,
+                    reward or RewardCfg.accuracy_guaranteed(), mode=mode,
+                    bounder=b), model, params, graph, ev
+
+
+def test_evaluator_full_bits_matches_unquantized():
+    env, model, params, graph, ev = _cnn_env()
+    val = SyntheticImages(img_size=8).batch(999, 64)
+    acc_raw = float(model.accuracy(
+        params, {k: jnp.asarray(v) for k, v in val.items()})) * 100
+    acc32 = ev(QuantPolicy.uniform(graph, 32.0))
+    assert abs(acc_raw - acc32) < 1e-3
+
+
+def test_hierarchical_episode_produces_valid_policy():
+    env, *_ = _cnn_env()
+    agent = HierarchicalAgent(env, seed=0)
+    log, policy = agent.run_episode(noise=0.5)
+    for layer in env.graph.layers:
+        wb = policy.weight_bits[layer.name]
+        assert wb.shape == (layer.n_groups,)
+        assert ((wb >= 0) & (wb <= 32)).all()
+        assert 0 <= policy.act_bits[layer.name] <= 32
+    assert np.isfinite(log.reward)
+
+
+def test_search_tracks_best():
+    env, *_ = _cnn_env()
+    agent = HierarchicalAgent(env, seed=0, updates_per_episode=2)
+    res = run_search(agent, n_explore=2, n_exploit=2)
+    assert len(res.history) == 4
+    assert res.best_log.reward == max(h.reward for h in res.history)
+    assert res.best_policy is not None
+
+
+def test_flat_agents_run():
+    for gran in ("layer", "channel"):
+        env, *_ = _cnn_env()
+        agent = FlatAgent(env, granularity=gran, updates_per_episode=2)
+        res = run_search(agent, n_explore=1, n_exploit=1)
+        assert len(res.history) == 2
+
+
+def test_binarize_mode_search():
+    env, *_ = _cnn_env(mode=QuantMode.BINARIZE)
+    agent = HierarchicalAgent(env, seed=0, updates_per_episode=2)
+    log, policy = agent.run_episode(noise=0.5)
+    assert policy.mode == QuantMode.BINARIZE
+    assert np.isfinite(log.acc)
+
+
+def test_resource_constrained_respects_budget_direction():
+    env, *_ = _cnn_env(reward=RewardCfg.resource_constrained(), bounder=True)
+    agent = HierarchicalAgent(env, seed=0, updates_per_episode=2)
+    log, policy = agent.run_episode(noise=0.3)
+    # with the bounder active the average goal cannot exceed ~2x target
+    assert log.avg_wbits <= 16.0
+
+
+def test_lm_env_search_smoke():
+    cfg = ARCHS["phi4-mini-3.8b"].smoke
+    model = LM(cfg)
+    params = model.init(KEY)
+    val = TokenStream(vocab=cfg.vocab).batch(0, 4, 16)
+    graph = model.graph(seq_len=16, batch=4, max_groups=8)
+    ev = make_lm_evaluator(model, params, graph, val)
+    env = QuantEnv(graph, params, ev, RewardCfg.accuracy_guaranteed())
+    agent = HierarchicalAgent(env, seed=0, updates_per_episode=2)
+    log, policy = agent.run_episode(noise=0.5)
+    assert np.isfinite(log.reward)
+    assert set(policy.weight_bits) == {l.name for l in graph.layers}
+
+
+def test_hiro_relabel_modes():
+    env, *_ = _cnn_env()
+    for mode in ("min", "ml"):
+        agent = HierarchicalAgent(env, seed=0, relabel=mode,
+                                  updates_per_episode=1)
+        log, _ = agent.run_episode(noise=0.5)
+        assert np.isfinite(log.reward)

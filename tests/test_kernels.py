@@ -1,0 +1,84 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+SHAPES_MM = [(128, 128, 128), (256, 384, 512), (100, 200, 300), (64, 130, 70),
+             (1, 128, 128), (130, 128, 257)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_quant_matmul_allclose(shape, dtype):
+    M, K, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    qw = jnp.asarray(RNG.integers(-127, 128, size=(K, N)), jnp.int8)
+    s = jnp.asarray(RNG.uniform(0.01, 0.1, size=(N,)), jnp.float32)
+    y = ops.quant_matmul(x, qw, s)
+    yr = ref.quant_matmul_ref(x, qw, s)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape,planes", [((128, 128, 128), 1),
+                                          ((64, 100, 70), 4),
+                                          ((256, 130, 128), 8)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_binary_matmul_allclose(shape, planes, dtype):
+    M, K, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, K)), dtype)
+    B = jnp.asarray(RNG.choice([-1, 1], size=(planes, K, N)), jnp.int8)
+    a = jnp.asarray(RNG.uniform(0.1, 1.0, size=(planes, N)), jnp.float32)
+    y = ops.binary_matmul(x, B, a)
+    yr = ref.binary_matmul_ref(x, B, a)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (100, 70), (512, 257)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fake_quant_kernel_allclose(shape, dtype):
+    M, N = shape
+    x = jnp.asarray(RNG.normal(size=(M, N)), dtype)
+    bits = jnp.asarray(RNG.integers(0, 9, size=(N,)), jnp.float32)
+    lv = jnp.maximum(2.0 ** (bits - 1) - 1, 1.0)
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0)
+    sc = jnp.where(amax > 0, amax / lv, 1.0)
+    y = ops.fake_quant_channels(x, sc, lv, bits)
+    yr = ref.fake_quant_ref(x, sc, lv, bits)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_quant_matmul_equals_full_dequant_matmul():
+    """Kernel output == x @ dequantized weights (the semantic contract)."""
+    from repro.quant import quant_pack_int8
+    x = jnp.asarray(RNG.normal(size=(64, 96)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(96, 48)), jnp.float32)
+    bits = jnp.asarray(RNG.integers(2, 9, size=48))
+    qw, s, _ = quant_pack_int8(w, bits, axis=1)
+    y = ops.quant_matmul(x, qw, s.reshape(-1))
+    wq = qw.astype(jnp.float32) * s
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ wq),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_shape_sweep():
+    x = jnp.asarray(RNG.normal(size=(256, 256)), jnp.float32)
+    qw = jnp.asarray(RNG.integers(-127, 128, size=(256, 256)), jnp.int8)
+    s = jnp.asarray(RNG.uniform(0.01, 0.1, size=(256,)), jnp.float32)
+    yr = ref.quant_matmul_ref(x, qw, s)
+    for bm, bn, bk in [(128, 128, 128), (256, 128, 64), (64, 256, 256)]:
+        y = ops.quant_matmul(x, qw, s, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-3, atol=1e-2)

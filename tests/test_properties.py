@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models.api import SSMCfg
+from repro.models.layers import attention, moe_ffn
+from repro.models.ssm import _ssd_chunk_scan
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), S=st.integers(3, 24),
+       chunk=st.sampled_from([4, 8, 16]))
+def test_ssd_chunked_equals_sequential(seed, S, chunk):
+    rng = np.random.default_rng(seed)
+    B, H, P, N = 2, 2, 3, 4
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.05, 1.0, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.3, 1.5, size=(H,)), jnp.float32)
+
+    y, state = _ssd_chunk_scan(xh, Bm, Cm, dt, A, chunk)
+
+    s = np.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        a = np.exp(np.asarray(dt[:, t]) * np.asarray(A))
+        s = s * a[..., None, None] + np.einsum(
+            "bh,bhp,bn->bhpn", np.asarray(dt[:, t]), np.asarray(xh[:, t]),
+            np.asarray(Bm[:, t]))
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(Cm[:, t]), s))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state), s, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), Sq=st.integers(1, 12),
+       Skv=st.integers(1, 40), hkv=st.sampled_from([1, 2]),
+       g=st.sampled_from([1, 3]))
+def test_flash_attention_equals_direct(seed, Sq, Skv, hkv, g):
+    """Chunked (flash) path == single-shot softmax attention."""
+    if Sq > Skv:
+        Sq = Skv
+    rng = np.random.default_rng(seed)
+    B, D = 2, 8
+    Hq = hkv * g
+    q = jnp.asarray(rng.normal(size=(B, Sq, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, hkv, D)), jnp.float32)
+    q_pos = jnp.broadcast_to(
+        jnp.arange(Skv - Sq, Skv, dtype=jnp.int32)[None], (B, Sq))
+    kv_pos = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None],
+                              (B, Skv))
+    direct = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, chunk=10**9)
+    chunked = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, chunk=7)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(chunked),
+                               rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), T=st.integers(4, 32),
+       E=st.sampled_from([2, 4]), K=st.sampled_from([1, 2]))
+def test_moe_full_capacity_equals_dense_mixture(seed, T, E, K):
+    """With no capacity drops, scatter-dispatch MoE == dense top-k mixture."""
+    rng = np.random.default_rng(seed)
+    d, ff = 6, 10
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    p = {"router": jnp.asarray(rng.normal(size=(d, E)), jnp.float32),
+         "wg": jnp.asarray(rng.normal(size=(E, d, ff)), jnp.float32),
+         "wu": jnp.asarray(rng.normal(size=(E, d, ff)), jnp.float32),
+         "wd": jnp.asarray(rng.normal(size=(E, ff, d)), jnp.float32)}
+    out, probs = moe_ffn(x, p, n_experts=E, top_k=K, capacity_factor=0.0)
+
+    # dense reference: every expert on every token, gated sum of top-k
+    logits = x @ p["router"]
+    pr = jax.nn.softmax(logits, -1)
+    gv, gi = jax.lax.top_k(pr, K)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    ref = jnp.zeros_like(x)
+    for e in range(E):
+        he = jax.nn.silu(x @ p["wg"][e]) * (x @ p["wu"][e])
+        ye = he @ p["wd"][e]
+        for kk in range(K):
+            w = jnp.where(gi[:, kk] == e, gv[:, kk], 0.0)
+            ref = ref + ye * w[:, None]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-4, atol=5e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 8))
+def test_policy_roundtrip_storage(seed, bits):
+    """quant -> pack -> dequant stays within the quantization error bound."""
+    from repro.quant import quant_pack_int8
+    from repro.quant.linear_quant import dequant_int8
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
+    q, s, _ = quant_pack_int8(w, float(bits), axis=1)
+    dq = dequant_int8(q, s)
+    amax = np.abs(np.asarray(w)).max(axis=0)
+    levels = max(2 ** (bits - 1) - 1, 1)
+    bound = amax / levels / 2 + 1e-6
+    assert (np.abs(np.asarray(w - dq)) <= bound[None, :] + 1e-6).all()

@@ -1,0 +1,94 @@
+"""Linear quantizer unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (fake_quant, fake_quant_per_channel, quant_pack_int8,
+                         ste_fake_quant)
+from repro.quant.linear_quant import dequant_int8
+
+RNG = np.random.default_rng(42)
+
+
+def _w(shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def test_zero_bits_prunes():
+    w = _w((32, 16))
+    assert bool(jnp.all(fake_quant(w, 0, axis=1) == 0))
+
+
+def test_full_bits_identity():
+    w = _w((32, 16))
+    assert bool(jnp.allclose(fake_quant(w, 32, axis=1), w))
+
+
+def test_error_monotone_in_bits():
+    # NOTE: starts at 2 -- symmetric signed quant has identical grids at
+    # 1 and 2 bits (both have a single positive level).
+    w = _w((64, 32))
+    errs = [float(jnp.mean((w - fake_quant(w, b, axis=1)) ** 2))
+            for b in (2, 4, 8, 12)]
+    assert all(a > b for a, b in zip(errs, errs[1:]))
+
+
+def test_per_channel_vector_bits():
+    w = _w((64, 32))
+    bits = np.asarray(RNG.integers(0, 9, size=32))
+    q = fake_quant_per_channel(w, jnp.asarray(bits), axis=1)
+    assert q.shape == w.shape
+    assert bool(jnp.all(q[:, bits == 0] == 0))
+    # channels at high bits are closer than at low bits on average
+    if (bits >= 6).any() and ((bits >= 1) & (bits <= 2)).any():
+        e_hi = float(jnp.mean((w - q)[:, bits >= 6] ** 2))
+        e_lo = float(jnp.mean((w - q)[:, (bits >= 1) & (bits <= 2)] ** 2))
+        assert e_hi < e_lo
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(1, 12), rows=st.integers(1, 20),
+       cols=st.integers(1, 20), seed=st.integers(0, 2**31 - 1))
+def test_fake_quant_idempotent(bits, rows, cols, seed):
+    """Quantizing a quantized tensor at the same bits is a fixed point."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    q1 = fake_quant(w, bits, axis=1)
+    q2 = fake_quant(q1, bits, axis=1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_quant_error_bound(bits, seed):
+    """|x - Q(x)| <= scale/2 = amax / (2(2^(b-1)-1)) per channel."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(40, 8)).astype(np.float32))
+    q = fake_quant(w, bits, axis=1)
+    amax = jnp.max(jnp.abs(w), axis=0)
+    levels = max(2 ** (bits - 1) - 1, 1)
+    bound = amax / levels / 2 + 1e-6
+    assert bool(jnp.all(jnp.abs(w - q) <= bound[None, :] + 1e-7))
+
+
+def test_pack_int8_consistent_with_fake_quant():
+    w = _w((32, 16))
+    bits = jnp.asarray(RNG.integers(0, 9, size=16))
+    qi, s, _ = quant_pack_int8(w, bits, axis=1)
+    assert qi.dtype == jnp.int8
+    dq = dequant_int8(qi, s)
+    fq = fake_quant(w, jnp.clip(bits, 0, 8), axis=1)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(fq), atol=1e-6)
+
+
+def test_ste_gradient_is_identity():
+    import jax
+    w = _w((8, 8))
+    g = jax.grad(lambda x: jnp.sum(ste_fake_quant(x, jnp.float32(4.0), 1) ** 2)
+                 )(w)
+    # straight-through: d/dx sum(Q(x)^2) approx 2*Q(x) under STE
+    np.testing.assert_allclose(np.asarray(g),
+                               2 * np.asarray(fake_quant(w, 4, axis=1)),
+                               rtol=1e-5, atol=1e-6)

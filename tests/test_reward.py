@@ -1,0 +1,63 @@
+"""NetScore / reward-protocol tests."""
+import numpy as np
+
+from repro.core.reward import RewardCfg, extrinsic_reward, netscore
+from repro.core.roofline import TPURoofline
+from repro.quant.policy import (LayerInfo, QuantPolicy, QuantizableGraph,
+                                QuantMode)
+
+
+def _graph():
+    return QuantizableGraph(layers=[
+        LayerInfo(name="l0", kind="linear", c_in=8, c_out=8, k=1, stride=1,
+                  macs=1e6, numel=64, param_path=("l0",), channel_axis=1,
+                  n_groups=8)])
+
+
+def test_netscore_monotone_in_accuracy():
+    cfg = RewardCfg.accuracy_guaranteed()
+    assert netscore(90, 0.2, 0.1, cfg) > netscore(80, 0.2, 0.1, cfg)
+
+
+def test_netscore_rewards_compression_in_ag_mode():
+    cfg = RewardCfg.accuracy_guaranteed()
+    assert netscore(90, 0.1, 0.05, cfg) > netscore(90, 0.2, 0.1, cfg)
+
+
+def test_rc_mode_ignores_cost():
+    cfg = RewardCfg.resource_constrained()
+    assert np.isclose(netscore(90, 0.1, 0.05, cfg),
+                      netscore(90, 0.9, 0.9, cfg))
+
+
+def test_flop_reward_ignores_weight_term():
+    g = _graph()
+    p_small_w = QuantPolicy.uniform(g, 2.0)
+    p_big_w = QuantPolicy.uniform(g, 2.0)
+    p_big_w.weight_bits["l0"][:] = 16.0   # heavier weights, same act bits
+    cfg = RewardCfg.flop_based()
+    r1 = extrinsic_reward(80.0, g, p_small_w, cfg)
+    r2 = extrinsic_reward(80.0, g, p_big_w, cfg)
+    # FLOP reward still sees logic ops (w*a), but not the p(N) weight-size
+    # term: manually compare against netscore with p forced to 1
+    from repro.core.reward import netscore as ns
+    m1 = p_small_w.logic_ops(g) / (g.total_macs * 32 * 32)
+    assert np.isclose(r1, ns(80.0, 1.0, m1, cfg))
+
+
+def test_roofline_latency_monotone_in_bits():
+    g = _graph()
+    rl = TPURoofline()
+    lat = [rl.latency(g, QuantPolicy.uniform(g, b)) for b in (2, 4, 8, 16)]
+    assert lat[0] <= lat[1] <= lat[2] <= lat[3]
+    assert rl.energy(g, QuantPolicy.uniform(g, 2)) < \
+        rl.energy(g, QuantPolicy.uniform(g, 16))
+
+
+def test_storage_overhead_below_paper_bound():
+    """Paper section 3.4: 6-bit QBN storage per channel is < 0.3% overhead."""
+    g = _graph()
+    policy = QuantPolicy.uniform(g, 8.0)
+    qbn_storage_bits = 6 * sum(l.c_out for l in g.layers)
+    model_bits = policy.model_size_bits(g)
+    assert qbn_storage_bits / model_bits < 0.3

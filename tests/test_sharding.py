@@ -1,0 +1,97 @@
+"""Sharding spec validity for every architecture at production dims.
+
+Every PartitionSpec axis assignment must evenly divide the corresponding
+tensor dimension -- checked for params, optimizer state, batches and caches
+of all 10 archs without touching device state (shape-level only).
+"""
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch.specs import (batch_struct, cache_struct, opt_struct,
+                                params_struct)
+from repro.models import LM, shape_by_name
+from repro.optim import AdamW
+from repro.sharding import specs as sh
+
+FAKE_MESH = types.SimpleNamespace(shape={"data": 16, "model": 16})
+FAKE_MESH_POD = types.SimpleNamespace(shape={"pod": 2, "data": 16,
+                                             "model": 16})
+
+
+def _check(tree_sds, tree_specs, mesh):
+    flat_s = jax.tree_util.tree_leaves_with_path(tree_sds)
+    flat_p = jax.tree_util.tree_leaves(
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, sds), spec in zip(flat_s, flat_p):
+        assert isinstance(spec, P), (path, spec)
+        for dim, names in zip(sds.shape, tuple(spec)):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            size = 1
+            for n in names:
+                size *= mesh.shape[n]
+            assert dim % size == 0, (path, sds.shape, spec)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+def test_param_and_opt_specs_divide(arch_id):
+    cfg = ARCHS[arch_id].config
+    model = LM(cfg)
+    p_sds = params_struct(model)
+    pspecs = sh.param_specs(p_sds, FAKE_MESH, cfg)
+    _check(p_sds, pspecs, FAKE_MESH)
+    o_sds = opt_struct(p_sds, AdamW(state_bits=8))
+    ospecs = sh.opt_specs(o_sds, pspecs, FAKE_MESH)
+    _check(o_sds, ospecs, FAKE_MESH)
+
+
+@pytest.mark.parametrize("arch_id", sorted(ARCHS))
+@pytest.mark.parametrize("shape_name", ["train_4k", "decode_32k",
+                                        "long_500k"])
+def test_batch_and_cache_specs_divide(arch_id, shape_name):
+    spec = ARCHS[arch_id]
+    if shape_name in spec.skip_shapes:
+        pytest.skip(spec.skip_reason)
+    cfg = spec.config
+    shp = shape_by_name(shape_name)
+    model = LM(cfg)
+    b_sds = batch_struct(cfg, shp, shp.mode)
+    _check(b_sds, sh.batch_specs(b_sds, FAKE_MESH), FAKE_MESH)
+    if shp.mode == "decode":
+        c_sds = cache_struct(model, shp.global_batch, shp.seq_len)
+        cspecs = sh.cache_specs(c_sds, cfg, FAKE_MESH,
+                                long_context=(shape_name == "long_500k"))
+        _check(c_sds, cspecs, FAKE_MESH)
+
+
+def test_multipod_batch_spec():
+    cfg = ARCHS["internlm2-20b"].config
+    shp = shape_by_name("train_4k")
+    b = batch_struct(cfg, shp, "train")
+    specs = sh.batch_specs(b, FAKE_MESH_POD)
+    assert tuple(specs["tokens"])[0] == ("pod", "data")
+
+
+def test_expert_weights_get_ep_sharding():
+    cfg = ARCHS["jamba-1.5-large-398b"].config
+    model = LM(cfg)
+    p_sds = params_struct(model)
+    pspecs = sh.param_specs(p_sds, FAKE_MESH, cfg)
+    # jamba: 16 experts over data=16 (EP), ff over model
+    moe_spec = pspecs["blocks"][1]["wg"]
+    assert tuple(moe_spec) == (None, "data", None, "model")
+
+
+def test_granite_odd_expert_count_falls_back():
+    cfg = ARCHS["granite-moe-3b-a800m"].config   # 40 experts: not /16
+    model = LM(cfg)
+    pspecs = sh.param_specs(params_struct(model), FAKE_MESH, cfg)
+    e_ax = tuple(pspecs["blocks"][0]["wg"])[1]
+    assert e_ax is None                           # replicated expert dim

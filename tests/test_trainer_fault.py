@@ -1,0 +1,67 @@
+"""Fault tolerance: preemption mid-run + auto-resume reproduces the
+uninterrupted run bit-for-bit (deterministic data + jitted step)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import SyntheticImages
+from repro.models.cnn import CNN, CNNConfig
+from repro.optim import AdamW
+from repro.train.loop import SimulatedPreemption, Trainer, TrainConfig
+
+CFG = CNNConfig(name="t", img_size=8, channels=(8, 8), pool_after=(0,))
+DATA = SyntheticImages(img_size=8)
+
+
+def _data_fn(step):
+    return DATA.batch(step, 32)
+
+
+def _mk(ckpt_dir, preempt_at=None, steps=24):
+    model = CNN(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    return Trainer(model, params, AdamW(lr=1e-3), _data_fn, str(ckpt_dir),
+                   TrainConfig(total_steps=steps, ckpt_every=8, log_every=8),
+                   preempt_at=preempt_at)
+
+
+def test_preempt_resume_bitwise_identical(tmp_path):
+    # uninterrupted reference
+    ref = _mk(tmp_path / "ref").run()
+
+    # preempted at step 13 (between checkpoints), then auto-resumed
+    with pytest.raises(SimulatedPreemption):
+        _mk(tmp_path / "pre", preempt_at=13).run()
+    resumed_trainer = _mk(tmp_path / "pre")          # fresh process simulacrum
+    assert resumed_trainer.start_step == 8           # newest complete ckpt
+    out = resumed_trainer.run()
+
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_skips_completed_work(tmp_path):
+    t1 = _mk(tmp_path / "c", steps=16)
+    t1.run()
+    t2 = _mk(tmp_path / "c", steps=16)
+    assert t2.start_step == 16
+    out = t2.run()                                   # no-op resume
+    for a, b in zip(jax.tree.leaves(t1.params), jax.tree.leaves(out["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_watchdog_records(tmp_path, monkeypatch):
+    tr = _mk(tmp_path / "s", steps=12)
+    import time as _time
+    real_time = _time.time
+    calls = {"n": 0}
+
+    def fake_time():
+        calls["n"] += 1
+        return real_time()
+
+    tr.run()
+    assert isinstance(tr.straggler_events, list)     # mechanism exists & ran
+    assert len(tr.step_times) == 12
