@@ -1,0 +1,16 @@
+# Tier-1 gate (`make test`): fast pre-commit suite, excludes @slow
+# end-to-end tests and is bounded at 10 minutes.  `make test-all` runs
+# everything (ROADMAP's tier-1 verify command runs the full suite too).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-all bench-packed
+
+test:
+	timeout 600 $(PY) -m pytest -x -q -m "not slow"
+
+test-all:
+	$(PY) -m pytest -x -q
+
+bench-packed:
+	$(PY) benchmarks/packed_vs_int8.py

@@ -15,7 +15,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -59,7 +59,8 @@ class HierarchicalAgent:
         self.updates_per_episode = updates_per_episode
 
     # ------------------------------------------------------------ one episode
-    def run_episode(self, noise: float, train: bool = True) -> EpisodeLog:
+    def run_episode(self, noise: float, train: bool = True
+                    ) -> Tuple[EpisodeLog, QuantPolicy]:
         env = self.env
         graph = env.graph
         if env.bounder is not None:

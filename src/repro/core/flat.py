@@ -8,6 +8,8 @@
 """
 from __future__ import annotations
 
+from typing import Tuple
+
 import numpy as np
 
 from repro.core.agent import EpisodeLog
@@ -34,7 +36,8 @@ class FlatAgent:
         self.rng = np.random.default_rng(seed)
         self.updates_per_episode = updates_per_episode
 
-    def run_episode(self, noise: float, train: bool = True):
+    def run_episode(self, noise: float, train: bool = True
+                    ) -> Tuple[EpisodeLog, QuantPolicy]:
         env = self.env
         graph = env.graph
         if env.bounder is not None:

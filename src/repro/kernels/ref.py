@@ -3,12 +3,24 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.quant.linear_quant import FULL_BITS
+
 
 def quant_matmul_ref(x: jnp.ndarray, qw: jnp.ndarray,
                      scale: jnp.ndarray) -> jnp.ndarray:
     """x: (M, K) f32/bf16; qw: (K, N) int8; scale: (N,) f32 per out channel."""
     w = qw.astype(jnp.float32) * scale[None, :].astype(jnp.float32)
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def packed_matmul_ref(x: jnp.ndarray, pw: jnp.ndarray, scale: jnp.ndarray,
+                      store_bits: int) -> jnp.ndarray:
+    """Unpack (kernels.pack format) then quant_matmul_ref.
+
+    x: (M, K); pw: (ceil(K/f), N) int8 packed along K; scale: (N,) f32."""
+    from repro.kernels.pack import unpack_sub8
+    q = unpack_sub8(pw, store_bits, k=x.shape[1], axis=0)
+    return quant_matmul_ref(x, q, scale)
 
 
 def binary_matmul_ref(x: jnp.ndarray, planes: jnp.ndarray,
@@ -27,16 +39,17 @@ def binary_matmul_ref(x: jnp.ndarray, planes: jnp.ndarray,
 
 
 def fake_quant_ref(x: jnp.ndarray, scale: jnp.ndarray, levels: jnp.ndarray,
-                   bits: jnp.ndarray) -> jnp.ndarray:
+                   bits: jnp.ndarray,
+                   full_bits: float = FULL_BITS) -> jnp.ndarray:
     """Per-channel quantize-dequantize with precomputed scales.
 
-    x: (M, N); scale, levels, bits: (N,).  bits<=0 prunes; bits>=24 passes
-    through (matches quant.linear_quant.FULL_BITS semantics).
+    x: (M, N); scale, levels, bits: (N,).  bits<=0 prunes; bits>=full_bits
+    passes through (the quant.linear_quant.FULL_BITS threshold).
     """
     xf = x.astype(jnp.float32)
     s = scale[None, :].astype(jnp.float32)
     lv = levels[None, :].astype(jnp.float32)
     b = bits[None, :].astype(jnp.float32)
     q = jnp.clip(jnp.round(xf / s), -lv, lv) * s
-    out = jnp.where(b <= 0.5, 0.0, jnp.where(b >= 24.0, xf, q))
+    out = jnp.where(b <= 0.5, 0.0, jnp.where(b >= full_bits, xf, q))
     return out.astype(x.dtype)

@@ -215,11 +215,14 @@ def _dot_flops(ln: str, result_type: str,
     out_elems = 1
     for d in rdims:
         out_elems *= d
-    mo = re.search(r"dot\(%?([\w\.\-]+)", ln)
+    # operands may carry inline types ('dot(f32[8,16]{1,0} %lhs, ...)' --
+    # older jax HLO text) or be bare names ('dot(%lhs, ...)')
+    mo = re.search(
+        r"dot\((?:([a-z0-9]+\[[0-9,]*\])(?:\{[^}]*\})?\s+)?%?([\w\.\-]+)", ln)
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
     if not (mo and mc):
         return 2.0 * out_elems      # degenerate: no contraction info
-    lhs_type = types.get(mo.group(1), "")
+    lhs_type = mo.group(1) or types.get(mo.group(2), "")
     lshapes = _shape_dims(lhs_type)
     if not lshapes:
         return 2.0 * out_elems

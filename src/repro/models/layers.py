@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.pack import PackedWeight
 from repro.quant.linear_quant import fake_quant
 
 NEG_INF = float("-inf")
@@ -37,14 +38,21 @@ def wrow(w):
 
 
 def deq(w):
-    """Dequantize int8-serving weights ({"q": int8, "s": scale}) at use.
+    """Dequantize quantized-serving weights at use.
 
-    On TPU the convert+scale fuses into the consuming matmul, so the stored
-    (HBM) format is 1 byte/element + scales -- the deployment layout AutoQ's
-    searched policies compile to (kernels/quant_matmul.py is the explicit-
-    tiling version of the same contraction).  Full-precision leaves pass
-    through untouched.
+    Two stored layouts dispatch here:
+      * {"q": int8, "s": scale} -- uniform int8 (quantize_params_int8);
+      * kernels.pack.PackedWeight -- the bucketed sub-byte layout a searched
+        mixed-QBN policy compiles to (apply_policy_packed): QBN <= 4 channels
+        bit-packed along K, 5..8 int8, > 8 bf16.
+    On TPU the unpack/convert+scale fuses into the consuming matmul, so HBM
+    weight traffic matches the stored width (1 byte, 1/2 byte, 1/4 byte per
+    element; kernels/quant_matmul.py and kernels/packed_matmul.py are the
+    explicit-tiling versions of the same contractions).  Full-precision
+    leaves pass through untouched.
     """
+    if isinstance(w, PackedWeight):
+        return w.dequant()
     if isinstance(w, dict) and "q" in w:
         return w["q"].astype(w["s"].dtype) * w["s"]
     return w

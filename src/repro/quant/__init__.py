@@ -13,6 +13,7 @@ from repro.quant.linear_quant import (
     fake_quant_per_channel,
     ste_fake_quant,
     quant_pack_int8,
+    quant_pack_sub8,
 )
 from repro.quant.binarize import binarize_residual, fake_binarize_per_channel
 from repro.quant.policy import (
@@ -24,6 +25,7 @@ from repro.quant.policy import (
 )
 from repro.quant.apply import (
     apply_policy_to_params,
+    apply_policy_packed,
     quantize_activation,
     policy_metrics,
 )
@@ -33,6 +35,7 @@ __all__ = [
     "fake_quant_per_channel",
     "ste_fake_quant",
     "quant_pack_int8",
+    "quant_pack_sub8",
     "binarize_residual",
     "fake_binarize_per_channel",
     "Granularity",
@@ -41,6 +44,7 @@ __all__ = [
     "LayerInfo",
     "QuantizableGraph",
     "apply_policy_to_params",
+    "apply_policy_packed",
     "quantize_activation",
     "policy_metrics",
 ]

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.quant.binarize import fake_binarize_per_channel
-from repro.quant.linear_quant import fake_quant, fake_quant_per_channel
+from repro.quant.linear_quant import (fake_quant, fake_quant_per_channel,
+                                      quant_pack_sub8)
 from repro.quant.policy import QuantMode, QuantPolicy, QuantizableGraph
 
 
@@ -55,6 +56,29 @@ def apply_policy_to_params(params: Any, graph: QuantizableGraph,
         else:
             qw = fake_binarize_per_channel(w, bits, axis=axis).astype(w.dtype)
         out = _set_path(out, layer.param_path, qw)
+    return out
+
+
+def apply_policy_packed(params: Any, graph: QuantizableGraph,
+                        policy: QuantPolicy) -> Any:
+    """Deployment transform: searched weights -> bucketed sub-byte stores.
+
+    Like :func:`apply_policy_to_params`, but instead of fake-quantized f32
+    tensors every searched weight leaf becomes a
+    :class:`repro.kernels.pack.PackedWeight` -- channels with QBN <= 4
+    bit-packed along K, 5..8 int8, > 8 bf16 passthrough -- so weight HBM
+    bytes actually track the searched policy.  ``models.layers.deq`` unpacks
+    at use; stacked (scan) weights ride through unchanged because every
+    PackedWeight child keeps the leading stack dim.
+    """
+    assert policy.mode == QuantMode.QUANT, \
+        "packed serving implements linear quantization (QBN) only"
+    out = params
+    for layer in graph.layers:
+        w = _get_path(params, layer.param_path)
+        bits = policy.expand_weight_bits(layer)
+        assert layer.channel_axis % w.ndim == w.ndim - 1, layer.name
+        out = _set_path(out, layer.param_path, quant_pack_sub8(w, bits))
     return out
 
 

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Bit-widths at or above this behave as full precision (f32 mantissa is 24
 # bits; >=24-bit fixed point is indistinguishable for our purposes).
@@ -106,3 +107,72 @@ def quant_pack_int8(w: jnp.ndarray, bits, axis: int = -1):
 def dequant_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     """Inverse of :func:`quant_pack_int8` (reference; kernel fuses this)."""
     return q.astype(jnp.float32) * scale
+
+
+def quant_pack_sub8(w: jnp.ndarray, bits, axis: int = -1):
+    """Quantize to the *bucketed sub-byte* stored layout + per-channel scales.
+
+    The deployment path that realizes searched sub-byte QBNs as actual HBM
+    bytes (kernels/pack.py holds the container; kernels/ops.py the matmuls):
+    each output channel is routed by its QBN into a storage bucket --
+
+        b <= 0   pruned     no storage (reconstructs as zeros)
+        b <= 2   int2       crumb-packed along K, 4 values/byte
+        b <= 4   int4       nibble-packed along K, 2 values/byte
+        b <= 8   int8       1 byte/value (same grid as quant_pack_int8)
+        b >  8   full       bf16 passthrough (2 bytes/value)
+
+    Channels quantize on their *own* grid (levels = 2^(b-1)-1, scale =
+    amax/levels, amax reduced over all non-channel dims -- identical to
+    fake_quant, so the packed store round-trips to the fake-quant numerics
+    for b <= 8).  Because storage width >= QBN within each bucket, every
+    quantized value fits its bucket's field exactly.
+
+    w: (..., K, N) with output channels **last** (axis must be the last
+    axis); bits: scalar or (N,) per-channel QBNs.  Bucket membership is
+    static (numpy), so this is a load-time transform, not a jit-traceable
+    op.  Returns a :class:`repro.kernels.pack.PackedWeight`.
+    """
+    # lazy import: kernels.fake_quant imports FULL_BITS from this module
+    from repro.kernels.pack import (PackedWeight, STORE_BITS, bucket_of_bits,
+                                    pack_sub8)
+    w = jnp.asarray(w)
+    assert w.ndim >= 2, w.shape
+    assert axis % w.ndim == w.ndim - 1, \
+        "packed layout requires output channels on the last axis"
+    n, k = w.shape[-1], w.shape[-2]
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=tuple(range(w.ndim - 1)))     # (n,)
+    b = np.rint(np.broadcast_to(
+        np.asarray(bits, np.float32), (n,))).astype(np.int64)
+    members: dict = {}
+    for c in range(n):
+        members.setdefault(bucket_of_bits(b[c]), []).append(c)
+    parts, buckets = [], []
+    for name in ("pruned", "int2", "int4", "int8", "full"):
+        idx = members.get(name)
+        if not idx:
+            continue
+        buckets.append((name, tuple(idx)))
+        if name == "pruned":
+            # zero-width sentinel keeps the leading (stack) dims observable
+            # even when every channel is pruned, and scans like any child
+            parts.append((jnp.zeros(w.shape[:-2] + (k, 0), jnp.int8),))
+            continue
+        idx_a = jnp.asarray(idx)
+        cols = wf[..., idx_a]
+        if name == "full":
+            parts.append((cols.astype(jnp.bfloat16),))
+            continue
+        lv = _levels(jnp.asarray(b[idx], jnp.float32))             # (nb,)
+        am = amax[idx_a]
+        sc = jnp.where(am > 0, am / lv, 1.0)
+        q = jnp.clip(jnp.round(cols / sc), -lv, lv).astype(jnp.int32)
+        data = q.astype(jnp.int8) if name == "int8" else \
+            pack_sub8(q, STORE_BITS[name], axis=-2)
+        # scale broadcast over leading (stack) dims so every child of the
+        # pytree scans with the weight it belongs to
+        scale = jnp.broadcast_to(sc, w.shape[:-2] + (len(idx),))
+        parts.append((data, scale.astype(jnp.float32)))
+    return PackedWeight(parts=tuple(parts), k=k, n=n, buckets=tuple(buckets),
+                        out_dtype=str(w.dtype))

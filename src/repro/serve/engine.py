@@ -1,13 +1,23 @@
 """Batched serving engine: prefill a prompt batch, decode with a KV cache.
 
-AutoQ integration: the engine deploys a searched :class:`QuantPolicy` --
-weights are quantized once at load (fake-quant numerics; the packed-int8 HBM
-layout and the fused dequant Pallas kernel are benchmarked separately in
-kernels/), activations at the policy's per-block bits during decode.
+AutoQ integration: the engine deploys a searched :class:`QuantPolicy` at
+weight-load time, with per-layer dispatch between two weight stores:
 
-This is the jnp-everywhere path: it runs on a laptop CPU and under a
-production mesh unchanged (the dry-run lowers the same prefill/decode steps
-against the 256/512-chip meshes).
+* ``weight_store="fake"`` -- fake-quantized f32 tensors (search-time
+  numerics, full-size HBM footprint);
+* ``weight_store="packed"`` -- the bucketed sub-byte layout
+  (quant.apply.apply_policy_packed): channels with QBN <= 4 bit-packed
+  along K (kernels/pack.py), 5..8 int8, > 8 bf16, so stored bytes track the
+  searched policy.  ``models.layers.deq`` unpacks at use; on TPU the unpack
+  fuses into the consuming matmul (kernels/packed_matmul.py is the
+  explicit-tiling version, benchmarked in benchmarks/packed_vs_int8.py).
+
+Activations are NOT yet quantized in the serve path (the policy's per-block
+activation QBNs are a ROADMAP open item; quant.apply.quantize_activation
+exists but the engine does not thread it into prefill/decode).  This is
+the jnp-everywhere path: it runs on a laptop CPU and under a production mesh
+unchanged (the dry-run lowers the same prefill/decode steps against the
+256/512-chip meshes).
 """
 from __future__ import annotations
 
@@ -19,8 +29,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.pack import PackedWeight
 from repro.models.transformer import LM
-from repro.quant.apply import apply_policy_to_params
+from repro.quant.apply import apply_policy_packed, apply_policy_to_params
 from repro.quant.policy import QuantPolicy
 
 
@@ -37,16 +48,48 @@ class ServeStats:
 
 class ServeEngine:
     def __init__(self, model: LM, params, policy: Optional[QuantPolicy] = None,
-                 graph=None, max_len: int = 512, cache_dtype=jnp.float32):
+                 graph=None, max_len: int = 512, cache_dtype=jnp.float32,
+                 weight_store: str = "fake"):
+        if weight_store not in ("fake", "packed"):
+            raise ValueError(f"unknown weight_store {weight_store!r}")
+        if weight_store == "packed" and policy is None:
+            raise ValueError("weight_store='packed' requires a policy "
+                             "(without one the engine would silently serve "
+                             "dense full-precision weights)")
         self.model = model
         self.max_len = max_len
         self.cache_dtype = cache_dtype
+        self.weight_store = weight_store
         if policy is not None:
             graph = graph or model.graph(seq_len=1, batch=1)
-            params = apply_policy_to_params(params, graph, policy)
+            if weight_store == "packed":
+                params = apply_policy_packed(params, graph, policy)
+            else:
+                params = apply_policy_to_params(params, graph, policy)
         self.params = params
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+
+    def weight_hbm_bytes(self) -> Dict[str, int]:
+        """Stored weight bytes by leaf kind.
+
+        ``packed`` counts PackedWeight buffers + scales (the sub-byte
+        store); ``int8`` counts {"q","s"} leaves; ``dense`` everything else.
+        The packed total is what a searched 4-bit-average policy's HBM
+        weight traffic actually costs -- the quantity core/roofline.py's
+        reward models."""
+        out = {"packed": 0, "int8": 0, "dense": 0}
+        leaves = jax.tree_util.tree_leaves_with_path(
+            self.params, is_leaf=lambda x: isinstance(x, PackedWeight))
+        for path, leaf in leaves:
+            if isinstance(leaf, PackedWeight):
+                out["packed"] += leaf.hbm_bytes()
+            elif any(getattr(p, "key", None) in ("q", "s") for p in path):
+                out["int8"] += leaf.size * leaf.dtype.itemsize
+            else:
+                out["dense"] += leaf.size * leaf.dtype.itemsize
+        out["total"] = out["packed"] + out["int8"] + out["dense"]
+        return out
 
     def generate(self, tokens: np.ndarray, n_new: int,
                  temperature: float = 0.0, seed: int = 0

@@ -1,0 +1,134 @@
+"""Fixed-seed fallback for the `hypothesis` subset the test suite uses.
+
+When `hypothesis` is installed (see requirements-dev.txt) the real library is
+used and this module is inert.  When it is not -- minimal CI images, the
+bare jax_pallas container -- conftest.py calls :func:`install`, which
+registers this module under ``sys.modules["hypothesis"]`` *before* test
+collection, so ``from hypothesis import given, settings, strategies as st``
+keeps working everywhere.
+
+The shim implements deterministic random sampling (seeded per test function)
+rather than true property-based search: each ``@given`` test runs
+``max_examples`` times with kwargs drawn from the declared strategies.  No
+shrinking, no database, no health checks -- but the same assertions run over
+the same kind of input distribution, and failures print the falsifying
+example so they can be pinned as regression tests.
+
+Supported API (the subset the suite imports):
+  given(**kwargs), settings(max_examples=, deadline=),
+  strategies.integers / floats / sampled_from / lists / tuples / booleans /
+  just.
+"""
+from __future__ import annotations
+
+import sys
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    """A draw rule: rng -> value.  Mirrors hypothesis' SearchStrategy shape
+    only as far as the suite needs (composition via lists/tuples)."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, int(max_value) + 1)))
+
+
+def floats(min_value: float, max_value: float, **_ignored) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10, **_ignored) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def given(*args, **kwargs):
+    if args:
+        raise NotImplementedError(
+            "compat shim supports keyword strategies only")
+
+    def decorate(fn):
+        def runner():
+            # settings() may decorate outside given() (sets the attribute on
+            # runner) or inside it (sets it on the original fn)
+            n = getattr(runner, "_max_examples",
+                        getattr(fn, "_max_examples", DEFAULT_MAX_EXAMPLES))
+            # per-function fixed seed: deterministic across runs, varied
+            # across tests
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in kwargs.items()}
+                try:
+                    fn(**drawn)
+                except BaseException:
+                    print(f"\n[hypothesis-compat] falsifying example for "
+                          f"{fn.__name__}: {drawn}", file=sys.stderr)
+                    raise
+        # copy identity by hand; functools.wraps would set __wrapped__ and
+        # pytest would then see the original (strategy) parameters as
+        # fixture requests
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._hypothesis_compat = True
+        return runner
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        fn._max_examples = max_examples
+        return fn
+    return decorate
+
+
+def install():
+    """Register this module as `hypothesis` (+`.strategies`) in sys.modules."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for f in (integers, floats, booleans, just, sampled_from, lists, tuples):
+        setattr(st, f.__name__, f)
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__compat_shim__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,5 +1,17 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here -- smoke tests must see the
 single real CPU device; only launch/dryrun.py requests 512 placeholders."""
+import os
+import sys
+
+# Make `from hypothesis import ...` work before test modules are collected:
+# prefer the real library, fall back to the fixed-seed shim.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import _hypothesis_compat
+    _hypothesis_compat.install()
+
 import jax
 import numpy as np
 import pytest

@@ -6,6 +6,10 @@ Covers steps.py + specs.py + sharding/specs.py + the HLO analyzer end-to-end.
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -52,10 +56,12 @@ for shape, mode, mk in [
 
 
 def test_launch_path_lowers_and_compiles():
+    # JAX_PLATFORMS=cpu keeps jax's TPU plugin from polling GCP metadata
+    # (30 HTTP retries per variable) inside the stripped subprocess env
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                        text=True, timeout=500,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"},
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
                        cwd="/root/repo")
     assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-2000:])
     assert r.stdout.count("OK") == 2

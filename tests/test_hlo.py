@@ -2,8 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.launch.hlo import analyze, _ring_factor
+
+pytestmark = pytest.mark.slow
 
 
 def test_scan_flops_multiplied_by_trip_count():
@@ -23,6 +26,8 @@ def test_scan_flops_multiplied_by_trip_count():
     assert abs(stats.flops - want) / want < 0.01, (stats.flops, want)
     # jax's own cost_analysis under-reports by ~TRIPS
     ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # jax 0.4.x: one dict per device
+        ca = ca[0]
     assert stats.flops > ca["flops"] * (TRIPS - 1)
 
 

@@ -1,0 +1,191 @@
+"""Sub-byte packed weight store: pack/unpack, kernel parity, serving parity.
+
+The acceptance contract for the packed path: for every mixed-QBN policy the
+packed matmul is allclose (atol 1e-4) to the jnp reference, pack->unpack is
+the identity, and the packed store costs <= 60% of the int8 store's bytes on
+a 4-bit-average policy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, pack, ref
+from repro.quant import (fake_quant_per_channel, quant_pack_int8,
+                         quant_pack_sub8)
+
+RNG = np.random.default_rng(11)
+
+# mixed per-group QBNs the searches land on, incl. prune (0) and full int8
+MIXED_QBNS = [0, 2, 3, 4, 8]
+
+
+def _mixed_bits(n):
+    reps = int(np.ceil(n / len(MIXED_QBNS)))
+    return np.asarray((MIXED_QBNS * reps)[:n], np.float32)
+
+
+# ------------------------------------------------------------ pack / unpack
+@settings(max_examples=15, deadline=None)
+@given(store_bits=st.sampled_from([2, 4]), k=st.integers(1, 40),
+       n=st.integers(1, 12), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(store_bits, k, n, seed):
+    """pack -> unpack is the identity for any in-range values, any K parity."""
+    rng = np.random.default_rng(seed)
+    lo, hi = -(2 ** (store_bits - 1)), 2 ** (store_bits - 1) - 1
+    q = rng.integers(lo, hi + 1, size=(k, n)).astype(np.int32)
+    p = pack.pack_sub8(jnp.asarray(q), store_bits, axis=0)
+    f = pack.SUB8_FACTORS[store_bits]
+    assert p.shape == (-(-k // f), n) and p.dtype == jnp.int8
+    u = pack.unpack_sub8(p, store_bits, k=k, axis=0)
+    np.testing.assert_array_equal(np.asarray(u), q)
+
+
+def test_pack_axis_generality():
+    """Packing along a middle axis (stacked weights) round-trips too."""
+    q = RNG.integers(-8, 8, size=(3, 21, 5)).astype(np.int32)
+    p = pack.pack_sub8(jnp.asarray(q), 4, axis=-2)
+    assert p.shape == (3, 11, 5)
+    u = pack.unpack_sub8(p, 4, k=21, axis=-2)
+    np.testing.assert_array_equal(np.asarray(u), q)
+
+
+# ------------------------------------------------------------ Pallas kernel
+@pytest.mark.parametrize("store_bits", [2, 4])
+@pytest.mark.parametrize("shape", [(128, 128, 128), (64, 130, 70),
+                                   (1, 96, 257), (100, 200, 48)])
+def test_packed_matmul_allclose(store_bits, shape):
+    """Packed Pallas kernel == jnp reference on aligned and ragged shapes."""
+    M, K, N = shape
+    lv = 2 ** (store_bits - 1) - 1
+    q = RNG.integers(-lv, lv + 1, size=(K, N)).astype(np.int32)
+    pw = pack.pack_sub8(jnp.asarray(q), store_bits, axis=0)
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    s = jnp.asarray(RNG.uniform(0.01, 0.1, size=(N,)), jnp.float32)
+    y = ops.packed_matmul(x, pw, s, store_bits=store_bits)
+    yr = ref.quant_matmul_ref(x, jnp.asarray(q, jnp.int8), s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_packed_matmul_block_sweep():
+    """Block shapes stay correct as long as bk is a multiple of 8/bits."""
+    K, N = 256, 192
+    q = RNG.integers(-1, 2, size=(K, N)).astype(np.int32)
+    pw = pack.pack_sub8(jnp.asarray(q), 2, axis=0)
+    x = jnp.asarray(RNG.normal(size=(64, K)), jnp.float32)
+    s = jnp.asarray(RNG.uniform(0.01, 0.1, size=(N,)), jnp.float32)
+    yr = ref.quant_matmul_ref(x, jnp.asarray(q, jnp.int8), s)
+    for bm, bn, bk in [(64, 64, 64), (128, 128, 128), (64, 128, 256)]:
+        y = ops.packed_matmul(x, pw, s, store_bits=2, bm=bm, bn=bn, bk=bk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------- bucketed layout + policy
+def test_sub8_dequant_matches_fake_quant():
+    """For QBN <= 8 the packed store round-trips to fake-quant numerics."""
+    n = 40
+    bits = _mixed_bits(n)
+    w = jnp.asarray(RNG.normal(size=(70, n)), jnp.float32)
+    pw = quant_pack_sub8(w, bits)
+    dq = pw.dequant()
+    fq = fake_quant_per_channel(w, jnp.asarray(bits), axis=-1)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(fq), atol=1e-6)
+    # pruned channels really are zero, and stored as zero bytes
+    nbytes = pw.bucket_nbytes()
+    assert nbytes.get("pruned", 0) == 0
+    assert bool(jnp.all(dq[:, bits == 0] == 0))
+
+
+def test_all_pruned_stacked_keeps_lead_dims():
+    """An all-pruned stacked (R, K, N) weight still dequantizes to
+    (R, K, N) zeros -- the pruned bucket's zero-width sentinel carries the
+    stack dims even when no bucket stores data."""
+    w = jnp.asarray(RNG.normal(size=(3, 8, 4)), jnp.float32)
+    pw = quant_pack_sub8(w, 0.0)
+    assert pw.hbm_bytes() == 0
+    dq = pw.dequant()
+    assert dq.shape == (3, 8, 4)
+    assert bool(jnp.all(dq == 0))
+
+
+@pytest.mark.parametrize("shape", [(64, 96, 40), (33, 130, 37), (1, 64, 257)])
+def test_mixed_qbn_matmul_parity(shape):
+    """Bucketed dispatch == x @ fake-quant reference across mixed QBNs
+    {0, 2, 3, 4, 8} and non-128-aligned M/K/N edges (atol 1e-4)."""
+    M, K, N = shape
+    bits = _mixed_bits(N)
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    x = jnp.asarray(RNG.normal(size=(M, K)), jnp.float32)
+    pw = quant_pack_sub8(w, bits)
+    y = ops.packed_mixed_matmul(x, pw)
+    wq = fake_quant_per_channel(w, jnp.asarray(bits), axis=-1)
+    yr = x @ wq
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fake_quant_padding_zero_scale_guard():
+    """Non-aligned N exercises ops.py padding: padded channels carry scale 0
+    pre-guard and must not poison real outputs with NaN/Inf."""
+    M, N = 50, 70                       # N % 128 != 0 -> padding engaged
+    x = jnp.asarray(RNG.normal(size=(M, N)), jnp.float32)
+    bits = jnp.asarray(_mixed_bits(N), jnp.float32)
+    lv = jnp.maximum(2.0 ** (bits - 1) - 1, 1.0)
+    amax = jnp.max(jnp.abs(x), axis=0)
+    sc = jnp.where(amax > 0, amax / lv, 1.0)
+    y = ops.fake_quant_channels(x, sc, lv, bits)
+    yr = ref.fake_quant_ref(x, sc, lv, bits)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_packed_store_bytes_leq_60pct_of_int8():
+    """Acceptance: on a 4-bit-average policy the packed store costs <= 60%
+    of the int8 store's weight-side HBM bytes."""
+    K, N = 512, 320
+    mix = [2, 3, 4, 4, 4, 4, 6, 8, 2, 3]          # avg 4.0
+    bits = np.asarray((mix * (N // len(mix)))[:N], np.float32)
+    assert abs(bits.mean() - 4.0) < 0.01
+    w = jnp.asarray(RNG.normal(size=(K, N)), jnp.float32)
+    qi, si, _ = quant_pack_int8(w, bits, axis=1)
+    int8_bytes = qi.size * qi.dtype.itemsize + si.size * si.dtype.itemsize
+    packed_bytes = quant_pack_sub8(w, bits).hbm_bytes()
+    assert packed_bytes <= 0.60 * int8_bytes, (packed_bytes, int8_bytes)
+
+
+# ------------------------------------------------------------ serving path
+def test_engine_packed_store_matches_fake_store():
+    """Greedy decode through the packed store == fake-quant store (weights
+    quantize on the same per-channel grid, so serving must be bit-identical
+    for QBN <= 8 policies)."""
+    from repro.configs import ARCHS
+    from repro.models import LM
+    from repro.quant.policy import QuantPolicy
+    from repro.serve import ServeEngine
+
+    key = jax.random.PRNGKey(0)
+    cfg = ARCHS["gemma2-2b"].smoke
+    model = LM(cfg)
+    params = model.init(key)
+    graph = model.graph(seq_len=4, batch=2)
+    policy = QuantPolicy.uniform(graph, 4.0)
+    rng = np.random.default_rng(0)
+    for l in graph.layers:
+        policy.weight_bits[l.name] = rng.choice(
+            [2, 3, 4, 4, 8], size=l.n_groups).astype(np.float32)
+    tokens = np.asarray(jax.random.randint(key, (2, 5), 0, cfg.vocab))
+    eng_fake = ServeEngine(model, params, policy=policy, graph=graph,
+                           max_len=16)
+    eng_pack = ServeEngine(model, params, policy=policy, graph=graph,
+                           max_len=16, weight_store="packed")
+    out_f = eng_fake.generate(tokens, n_new=3)
+    out_p = eng_pack.generate(tokens, n_new=3)
+    np.testing.assert_array_equal(out_f["tokens"], out_p["tokens"])
+    hbm_f = eng_fake.weight_hbm_bytes()
+    hbm_p = eng_pack.weight_hbm_bytes()
+    assert hbm_p["packed"] > 0
+    assert hbm_p["total"] < 0.5 * hbm_f["total"]    # ~4-bit avg vs f32

@@ -23,6 +23,8 @@ CFG = CNNConfig(name="sys", img_size=12, channels=(8, 16, 16),
                 pool_after=(0, 1))
 DATA = SyntheticImages(img_size=12)
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained_cnn():
