@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench-packed
+.PHONY: test test-all bench-packed bench-cb docs-check
 
 test:
 	timeout 600 $(PY) -m pytest -x -q -m "not slow"
@@ -14,3 +14,10 @@ test-all:
 
 bench-packed:
 	$(PY) benchmarks/packed_vs_int8.py
+
+bench-cb:
+	$(PY) benchmarks/continuous_batching.py
+
+# every docs/ page must be reachable from docs/index.md (CI runs this too)
+docs-check:
+	$(PY) scripts/check_docs.py

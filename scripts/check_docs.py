@@ -1,0 +1,56 @@
+#!/usr/bin/env python
+"""Docs reachability check: every page in docs/ must be linked (transitively)
+from docs/index.md, and every relative link must resolve to a real file.
+
+Run via ``make docs-check``; CI runs it on every push.  Exit status is
+non-zero on orphaned pages or broken links, with one line per finding.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = Path(__file__).resolve().parent.parent / "docs"
+INDEX = DOCS / "index.md"
+# markdown inline links: [text](target); ignores external and anchor links
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+
+
+def links_of(page: Path):
+    for target in LINK_RE.findall(page.read_text(encoding="utf-8")):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        yield target, (page.parent / target).resolve()
+
+
+def main() -> int:
+    if not INDEX.is_file():
+        print(f"docs-check: missing landing page {INDEX}")
+        return 1
+    problems = []
+    seen = {INDEX.resolve()}
+    frontier = [INDEX]
+    while frontier:
+        page = frontier.pop()
+        for raw, resolved in links_of(page):
+            if not resolved.exists():
+                problems.append(
+                    f"broken link in {page.relative_to(DOCS.parent)}: "
+                    f"({raw})")
+            elif resolved.suffix == ".md" and resolved not in seen \
+                    and DOCS in resolved.parents:
+                seen.add(resolved)
+                frontier.append(resolved)
+    orphans = sorted(p for p in DOCS.rglob("*.md") if p.resolve() not in seen)
+    problems += [f"orphaned page (unreachable from docs/index.md): "
+                 f"{p.relative_to(DOCS.parent)}" for p in orphans]
+    for msg in problems:
+        print(f"docs-check: {msg}")
+    if not problems:
+        print(f"docs-check: OK ({len(seen)} pages reachable from index)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,6 +25,24 @@ QBN into ``pruned`` (no storage) / ``int2`` / ``int4`` / ``int8`` / ``full``
 all keep any leading stack dims, so it rides through ``jax.jit`` and
 ``lax.scan`` (the LM's stacked-block layout) unchanged.
 
+Invariants every consumer may rely on (and none may weaken):
+
+* **K-axis packing order**: packing always runs along the contraction
+  axis, little-endian within the byte -- byte ``r`` of a channel holds
+  original K rows ``r*f .. r*f+f-1``, lowest-order field first.  The N
+  (output-channel) axis is never packed, so per-channel scales and bucket
+  membership map 1:1 onto packed columns.
+* **Zero padding is exact**: K pads to a multiple of ``f`` with zero
+  bytes, which unpack to zero weights -- contractions over the pad are
+  no-ops, so callers (ops.py, the Pallas grids) may over-tile freely.
+* **Fields are two's-complement in ``store_bits``**: :func:`extract_fields`
+  is the one definition of the read side, shared by the host unpack and
+  the in-VMEM kernel unpack, so the format cannot drift between them.
+* **Grid identity with fake-quant**: each channel quantizes on its own
+  ``levels = 2^(b-1)-1`` grid, identical to ``quant.linear_quant``'s
+  fake-quant -- dequantizing a ``b <= 8`` bucket reproduces the
+  search-time numerics bit-exactly (serving-parity tests pin this).
+
 See docs/packed_layout.md for the full format description.
 """
 from __future__ import annotations

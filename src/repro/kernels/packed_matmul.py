@@ -19,6 +19,21 @@ for native-int4 MXU dtypes is tracked in ROADMAP.md.
 Tiling matches quant_matmul: grid (M/bm, N/bn, K/bk), K innermost so the f32
 accumulator tile stays resident in VMEM scratch; ``bk`` must be a multiple of
 ``f`` so packed tiles stay byte-aligned.
+
+Invariants:
+
+* **Scale placement**: per-output-channel scales are applied exactly once,
+  at the *final* K step, to the completed f32 accumulator -- never per
+  K-tile.  Folding scales into partial products would change the rounding
+  of the accumulation and break bit-parity with the jnp reference
+  (``ref.quant_matmul_ref`` scales the full integer-ish product too).
+* **Unpack order matches pack.py's K-axis order**: field plane ``i`` of
+  packed row ``r`` is original K row ``r*f + i``; the stack+reshape
+  interleave restores exact K order before the MXU dot, so the kernel
+  contracts the same (K, N) matrix the host packed.
+* **Accumulation dtype**: the MXU matmul accumulates in f32
+  (``preferred_element_type``) regardless of the output dtype; the cast
+  happens after scaling at the final K step.
 """
 from __future__ import annotations
 

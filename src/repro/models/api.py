@@ -100,6 +100,30 @@ class LMConfig:
     def has_kind(self, kind: str) -> bool:
         return any(b.kind == kind for b in self.pattern)
 
+    def cache_kinds(self) -> Tuple[str, ...]:
+        """Decode-state kind per pattern position, from the serving engine's
+        point of view:
+
+        * ``"paged"``  -- self-attention (global or sliding-window): per-token
+          K/V that a paged pool can hold (serve/paged_kv.py);
+        * ``"memory"`` -- cross-attention: a fixed-length per-sequence memory
+          written once at prefill, read-only during decode;
+        * ``"state"``  -- recurrent (mamba) state: O(1)-size per sequence,
+          indexed by batch slot, no paging needed.
+
+        The paged serving path (transformer.init_paged_cache, serve/engine
+        ``run``) keys its cache layout and prefill scatter off this tuple.
+        """
+        out = []
+        for b in self.pattern:
+            if b.kind == "mamba":
+                out.append("state")
+            elif b.kind == "cross_attn":
+                out.append("memory")
+            else:
+                out.append("paged")
+        return tuple(out)
+
     @property
     def is_subquadratic(self) -> bool:
         """True when decode state does not require a full-attention KV cache

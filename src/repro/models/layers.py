@@ -169,6 +169,38 @@ def attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
     return o.reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
+# ----------------------------------------------------- paged-KV attention
+def paged_gather(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Gather per-sequence KV through block tables.
+
+    pages: (P, page_size, ...) physical pool; block_tables: (B, nb) int32
+    physical page ids (logical block order).  Returns (B, nb*page_size, ...)
+    -- each sequence's pages flattened back into logical position order.
+    Unmapped blocks point at the trash page (id 0); its slots carry sentinel
+    positions, so the attention mask rejects them.
+    """
+    g = pages[block_tables]                      # (B, nb, ps, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_attention(q, k_pages, v_pages, pos_pages, block_tables, *, q_pos,
+                    causal=True, window=None, attn_cap=None):
+    """Decode attention over a paged KV pool.
+
+    q: (B, 1, Hq, D); ``*_pages``: (P, page_size, Hkv, D) (``pos_pages``
+    (P, page_size) int32); block_tables: (B, nb).  Gathers each sequence's
+    pages into logical order and runs the standard masked flash attention --
+    slots whose position is the sentinel (unwritten, scrubbed, or trash)
+    mask to -inf exactly like the dense cache's convention, so the result
+    matches dense-cache decode on the same written positions.
+    """
+    k = paged_gather(k_pages, block_tables)
+    v = paged_gather(v_pages, block_tables)
+    kv_pos = paged_gather(pos_pages, block_tables)
+    return attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                     window=window, attn_cap=attn_cap, chunk=k.shape[1])
+
+
 # ----------------------------------------------------------------------- FFN
 def swiglu(x, p, act_bits=None):
     """p: {wg: (d, ff), wu: (d, ff), wd: (ff, d)}."""

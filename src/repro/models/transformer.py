@@ -27,7 +27,8 @@ import numpy as np
 from repro.models import ssm as ssm_mod
 from repro.models.api import BlockDef, LMConfig
 from repro.models.layers import (attention, deq, maybe_quant_act, moe_ffn,
-                                 rmsnorm, rope, softcap, swiglu, wcol, wrow)
+                                 paged_attention, rmsnorm, rope, softcap,
+                                 swiglu, wcol, wrow)
 from repro.quant.policy import LayerInfo, QuantizableGraph
 from repro.sharding.ctx import constrain
 
@@ -148,8 +149,14 @@ class LM:
 
     # ---------------------------------------------------------------- blocks
     def _attn_block(self, bp, bdef, x, *, q_pos, mode, img_embeds=None,
-                    cache=None, write_pos=None, act_bits=None):
-        """Self- or cross-attention + residual.  Returns (x, new_cache)."""
+                    cache=None, write_pos=None, act_bits=None,
+                    block_tables=None):
+        """Self- or cross-attention + residual.  Returns (x, new_cache).
+
+        block_tables (decode only): (B, nb) int32 physical page ids -- the
+        cache entry is then a paged pool (P, page_size, Hkv, hd) shared by
+        the batch, written through the table and gathered back per sequence
+        (``write_pos`` is per-sequence (B,) in that mode)."""
         cfg = self.cfg
         B, S, _ = x.shape
         Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
@@ -178,6 +185,28 @@ class LM:
             k = rope(k, q_pos, cfg.rope_theta)
             kv_pos = q_pos
             if cache is not None:
+                if block_tables is not None:        # paged decode write+gather
+                    ps = cache["k"].shape[-3]
+                    # idle lanes carry write_pos == POS_SENTINEL: clip their
+                    # (huge) block index into the all-trash table row, and
+                    # the sentinel pos value keeps the written slot masked
+                    blk = (write_pos // ps).astype(jnp.int32)
+                    phys = jnp.take_along_axis(block_tables, blk[:, None],
+                                               axis=1, mode="clip")[:, 0]
+                    pslot = write_pos % ps
+                    new_cache = dict(cache)
+                    new_cache["k"] = cache["k"].at[phys, pslot].set(
+                        k[:, 0].astype(cache["k"].dtype))
+                    new_cache["v"] = cache["v"].at[phys, pslot].set(
+                        v[:, 0].astype(cache["v"].dtype))
+                    new_cache["pos"] = cache["pos"].at[phys, pslot].set(
+                        write_pos.astype(jnp.int32))
+                    out = paged_attention(
+                        q, new_cache["k"], new_cache["v"], new_cache["pos"],
+                        block_tables, q_pos=q_pos, causal=causal,
+                        window=window, attn_cap=cfg.attn_softcap)
+                    x = x + out.reshape(B, S, Hq * hd) @ wrow(bp["wo"])
+                    return x, new_cache
                 W = cache["k"].shape[1]
                 if mode == "decode":
                     slot = write_pos % W if bdef.kind == "local_attn" \
@@ -186,10 +215,19 @@ class LM:
                     k = _kv_deq(new_cache, "k")
                     v = _kv_deq(new_cache, "v")
                     kv_pos = new_cache["pos"]
-                else:  # prefill: write last W positions from offset 0
+                else:  # prefill: write last W positions, ring-aligned
                     kw, vw, pw = k, v, q_pos
                     if W < S:
-                        kw, vw, pw = k[:, -W:], v[:, -W:], q_pos[:, -W:]
+                        # keep positions S-W..S-1, rolled so position p sits
+                        # at its ring slot p % W -- decode's overwrite at
+                        # write_pos % W then evicts exactly the oldest
+                        # position (evicting an arbitrary one would drop a
+                        # still-in-window entry, diverging from the paged
+                        # and full-forward paths)
+                        sh = (S - W) % W
+                        kw = jnp.roll(k[:, -W:], sh, axis=1)
+                        vw = jnp.roll(v[:, -W:], sh, axis=1)
+                        pw = jnp.roll(q_pos[:, -W:], sh, axis=1)
                     new_cache = _kv_write(cache, kw, vw, pw, 0)
         chunk = k.shape[1] if S == 1 else 1024
         out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
@@ -213,7 +251,7 @@ class LM:
 
     def _apply_block(self, bp, bdef: BlockDef, x, *, q_pos, mode,
                      img_embeds=None, cache=None, write_pos=None,
-                     act_bits=None):
+                     act_bits=None, block_tables=None):
         if bdef.kind == "mamba":
             h = rmsnorm(x, bp["norm"], self.cfg.norm_eps)
             h = maybe_quant_act(h, act_bits)
@@ -231,7 +269,9 @@ class LM:
         else:
             x, new_cache = self._attn_block(
                 bp, bdef, x, q_pos=q_pos, mode=mode, img_embeds=img_embeds,
-                cache=cache, write_pos=write_pos, act_bits=act_bits)
+                cache=cache, write_pos=write_pos, act_bits=act_bits,
+                block_tables=None if bdef.kind == "cross_attn"
+                else block_tables)
         aux = jnp.float32(0.0)
         if bdef.has_ffn:
             x, aux = self._ffn(bp, bdef, x, act_bits=act_bits)
@@ -388,6 +428,57 @@ class LM:
             caches.append(stacked)
         return tuple(caches)
 
+    def init_paged_cache(self, n_slots: int, num_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+        """Paged decode cache for the continuous-batching engine.
+
+        Per pattern position (stacked over n_repeat like ``init_cache``),
+        keyed by ``cfg.cache_kinds()``:
+
+        * ``"paged"`` (attn / local_attn): a pool of ``num_pages`` physical
+          pages of ``page_size`` KV slots shared by all sequences --
+          ``{"k","v": (R, P, ps, Hkv, hd), "pos": (R, P, ps) int32}``.
+          ``pos`` starts at ``POS_SENTINEL`` so unwritten slots are masked;
+          page 0 is the trash page (serve/paged_kv.py owns the lifecycle).
+        * ``"memory"`` (cross_attn) / ``"state"`` (mamba): dense per-slot
+          caches with batch axis ``n_slots``, exactly the single-batch
+          layouts, since neither grows with decoded length.
+
+        int8 KV (``kv_bits``) is not yet threaded through the paged pool;
+        use the dense engine path for quantized KV serving.
+        """
+        cfg = self.cfg
+
+        def kv_pages():
+            return {
+                "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                                cfg.hdim), dtype),
+                "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
+                                cfg.hdim), dtype),
+                "pos": jnp.full((num_pages, page_size), POS_SENTINEL,
+                                jnp.int32),
+            }
+
+        caches = []
+        for bdef, kind in zip(cfg.pattern, cfg.cache_kinds()):
+            if kind == "state":
+                one = ssm_mod.init_mamba_cache(n_slots, cfg.d_model, cfg.ssm,
+                                               dtype)
+            elif kind == "memory":
+                one = {
+                    "k": jnp.zeros((n_slots, cfg.n_img_tokens,
+                                    cfg.n_kv_heads, cfg.hdim), dtype),
+                    "v": jnp.zeros((n_slots, cfg.n_img_tokens,
+                                    cfg.n_kv_heads, cfg.hdim), dtype),
+                }
+            else:
+                one = kv_pages()
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_repeat,) + a.shape),
+                one)
+            caches.append(stacked)
+        return tuple(caches)
+
     # ------------------------------------------------------------ prefill
     def prefill(self, params, batch, cache, act_bits=None):
         """Run the prompt, fill the cache, return last-token logits."""
@@ -433,6 +524,39 @@ class LM:
                 x, nc, _ = self._apply_block(
                     blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="decode",
                     cache=cache_slice[p_idx], write_pos=pos)
+                x = constrain(x, "hidden")
+                new_slices.append(nc if nc is not None else cache_slice[p_idx])
+            return x, tuple(new_slices)
+
+        x, new_cache = jax.lax.scan(repeat_body, x, (params["blocks"], cache))
+        return self.logits_of(params, x), new_cache
+
+    # ------------------------------------------------------ paged decode
+    def decode_step_paged(self, params, tokens, cache, block_tables, pos,
+                          act_bits=None):
+        """One decode step over a paged KV pool, per-sequence positions.
+
+        tokens: (B, 1) int32; block_tables: (B, nb) int32 physical page ids
+        (``paged_kv.BlockTables.as_array``); pos: (B,) int32 -- the position
+        each sequence's token occupies (mixed lengths, unlike
+        ``decode_step``'s single scalar).  ``cache`` is an
+        ``init_paged_cache`` tuple.  Inactive batch slots carry all-trash
+        block tables: their writes land in page 0 and their outputs are
+        garbage the scheduler ignores.  Returns (logits, new_cache)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, tokens)
+        x = constrain(x, "hidden")
+        B = x.shape[0]
+        q_pos = pos.astype(jnp.int32)[:, None]
+
+        def repeat_body(x, xs):
+            blocks_slice, cache_slice = xs
+            new_slices = []
+            for p_idx, bdef in enumerate(cfg.pattern):
+                x, nc, _ = self._apply_block(
+                    blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="decode",
+                    cache=cache_slice[p_idx], write_pos=pos,
+                    block_tables=block_tables)
                 x = constrain(x, "hidden")
                 new_slices.append(nc if nc is not None else cache_slice[p_idx])
             return x, tuple(new_slices)

@@ -1,4 +1,22 @@
-"""Serving substrate: batched prefill/decode engine with quantized weights."""
-from repro.serve.engine import ServeEngine
+"""Serving substrate: request scheduling, paged KV, prefill/decode engines.
 
-__all__ = ["ServeEngine"]
+Layering (each module is importable on its own):
+
+* :mod:`repro.serve.paged_kv` -- page pool mechanics: free-list allocator,
+  per-sequence block tables, scrub-on-alloc and the prefill scatter.  Owns
+  the trash-page and position-sentinel invariants.
+* :mod:`repro.serve.scheduler` -- continuous-batching policy: admission
+  queue, slot states, page lifecycle.  Pure host-side bookkeeping.
+* :mod:`repro.serve.engine` -- :class:`ServeEngine`: quantized weight-store
+  deployment (fake-quant or bit-packed) + the two execution models,
+  ``generate`` (single dense batch, the oracle) and ``run`` (continuous
+  batching over the paged pool).
+
+See docs/serving.md for the architecture walkthrough.
+"""
+from repro.serve.engine import ServeEngine, ServeStats
+from repro.serve.paged_kv import PageAllocator, PagesExhausted, pages_needed
+from repro.serve.scheduler import Request, Scheduler
+
+__all__ = ["ServeEngine", "ServeStats", "Request", "Scheduler",
+           "PageAllocator", "PagesExhausted", "pages_needed"]

@@ -1,4 +1,17 @@
-"""Batched serving engine: prefill a prompt batch, decode with a KV cache.
+"""Serving engine: single-batch prefill/decode plus continuous batching.
+
+Two execution models share one weight store and one model:
+
+* :meth:`ServeEngine.generate` -- the original batch-at-a-time path: one
+  dense ``[B, max_len]`` KV cache, every sequence prefilled together, the
+  whole batch decoded in lockstep.  It is the *oracle*: the paged path must
+  reproduce its token streams per request.
+* :meth:`ServeEngine.run` -- continuous batching over a paged KV cache:
+  requests of mixed lengths are admitted into decode-batch slots as pages
+  and slots free up (serve/scheduler.py), prefill runs per admitted request
+  and scatters into the page pool (serve/paged_kv.py), and a single jit'd
+  ``decode_step_paged`` advances all in-flight sequences one token per step
+  through their block tables.
 
 AutoQ integration: the engine deploys a searched :class:`QuantPolicy` at
 weight-load time, with per-layer dispatch between two weight stores:
@@ -12,6 +25,10 @@ weight-load time, with per-layer dispatch between two weight stores:
   fuses into the consuming matmul (kernels/packed_matmul.py is the
   explicit-tiling version, benchmarked in benchmarks/packed_vs_int8.py).
 
+Both stores serve through *both* execution models unchanged -- the store is
+a property of the parameters, not of the cache layout (invariant guarded by
+tests/test_paged_kv.py parity tests).
+
 Activations are NOT yet quantized in the serve path (the policy's per-block
 activation QBNs are a ROADMAP open item; quant.apply.quantize_activation
 exists but the engine does not thread it into prefill/decode).  This is
@@ -23,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +50,8 @@ from repro.kernels.pack import PackedWeight
 from repro.models.transformer import LM
 from repro.quant.apply import apply_policy_packed, apply_policy_to_params
 from repro.quant.policy import QuantPolicy
+from repro.serve import paged_kv
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
@@ -40,10 +59,16 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
+    prefill_tokens: int = 0         # emitted during prefill, timed there
+    steps: int = 0                  # decode steps (run(): batched steps)
+    n_requests: int = 0
 
     @property
     def decode_tok_per_s(self) -> float:
-        return self.tokens_out / self.decode_s if self.decode_s else 0.0
+        # run() samples each request's first token from the prefill logits
+        # (timed in prefill_s), so it must not inflate the decode rate
+        return ((self.tokens_out - self.prefill_tokens) / self.decode_s
+                if self.decode_s else 0.0)
 
 
 class ServeEngine:
@@ -69,6 +94,7 @@ class ServeEngine:
         self.params = params
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
+        self._decode_paged = jax.jit(model.decode_step_paged)
 
     def weight_hbm_bytes(self) -> Dict[str, int]:
         """Stored weight bytes by leaf kind.
@@ -91,6 +117,7 @@ class ServeEngine:
         out["total"] = out["packed"] + out["int8"] + out["dense"]
         return out
 
+    # --------------------------------------------------------- single batch
     def generate(self, tokens: np.ndarray, n_new: int,
                  temperature: float = 0.0, seed: int = 0
                  ) -> Dict[str, Any]:
@@ -98,7 +125,7 @@ class ServeEngine:
         B, S = tokens.shape
         assert S + n_new <= self.max_len
         cache = self.model.init_cache(B, self.max_len, dtype=self.cache_dtype)
-        stats = ServeStats()
+        stats = ServeStats(n_requests=B)
         t0 = time.time()
         logits, cache = self._prefill(self.params,
                                       {"tokens": jnp.asarray(tokens)}, cache)
@@ -123,4 +150,142 @@ class ServeEngine:
         jax.block_until_ready(logits)
         stats.decode_s = time.time() - t0
         stats.tokens_out = B * n_new
+        stats.steps = n_new
         return {"tokens": np.concatenate(out, axis=1), "stats": stats}
+
+    # --------------------------------------------------- continuous batching
+    def run(self, requests: Sequence[Union[Request, Dict[str, Any], tuple]],
+            *, page_size: int = 16, max_slots: int = 8,
+            num_pages: Optional[int] = None) -> Dict[str, Any]:
+        """Serve a workload of mixed-length requests with continuous batching.
+
+        requests: each a :class:`Request`, a ``{"tokens", "n_new",
+        "temperature"?, "seed"?}`` dict, or a ``(tokens, n_new)`` tuple;
+        ``tokens`` is a 1-D prompt.  Per-request greedy/sampled decode
+        follows the same rng discipline as a single-request
+        :meth:`generate` call with that request's seed, so greedy outputs
+        are comparable token-for-token against independent ``generate``
+        calls.
+
+        page_size: KV positions per page.  max_slots: decode-batch width
+        (compiled shape).  num_pages: pool size; default sizes for the
+        worst case (``max_slots`` sequences at ``max_len``), which can never
+        stall.  A smaller pool throttles *admission* only -- already-running
+        sequences still grow a page at every boundary, and if concurrent
+        growth drains the pool mid-run, :class:`~.paged_kv.PagesExhausted`
+        propagates and the whole workload's outputs are lost (admission
+        headroom reserves one decode page per admit, not the lifetime
+        worst case).  Undersize it only for workloads whose total live KV
+        provably fits.
+
+        Returns ``{"outputs": [np.ndarray per request, submit order],
+        "stats": ServeStats}``.
+        """
+        reqs = [self._as_request(i, r) for i, r in enumerate(requests)]
+        for r in reqs:
+            if r.prompt_len + r.n_new > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: {r.prompt_len}+{r.n_new} tokens "
+                    f"exceeds max_len={self.max_len}")
+        blocks_per_seq = paged_kv.pages_needed(self.max_len, page_size)
+        if num_pages is None:
+            num_pages = max_slots * blocks_per_seq + 1      # +1: trash page
+        cache = self.model.init_paged_cache(max_slots, num_pages, page_size,
+                                            dtype=self.cache_dtype)
+        kinds = self.model.cfg.cache_kinds()
+        sched = Scheduler(max_slots, page_size,
+                          blocks_per_seq, paged_kv.PageAllocator(num_pages))
+        for r in reqs:
+            sched.submit(r)
+
+        outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
+        rngs: Dict[int, jax.Array] = {}
+        stats = ServeStats(n_requests=len(reqs))
+        while sched.has_work:
+            # ---- admission: prefill queued requests into free slots/pages
+            admitted = 0
+            while (adm := sched.try_admit()) is not None:
+                admitted += 1
+                req, slot, pages = adm
+                t0 = time.time()
+                logits, dense = self._prefill_one(req, page_size)
+                cache = paged_kv.scrub_pages(cache, kinds, pages)
+                cache = paged_kv.write_prefill(cache, dense, kinds, slot,
+                                               pages, page_size)
+                tok = self._next_token(req, rngs, np.asarray(logits[:, -1]))
+                stats.prefill_s += time.time() - t0
+                outputs[req.rid].append(tok)
+                stats.tokens_out += 1
+                stats.prefill_tokens += 1
+                sched.bind(slot, req, tok)
+
+            running = sched.running_slots()
+            if not running:
+                if sched.has_work and not admitted:
+                    raise paged_kv.PagesExhausted(
+                        "queued request cannot ever be admitted: pool of "
+                        f"{num_pages} pages (page_size={page_size}) is too "
+                        "small for its prompt + decode headroom")
+                continue                    # everything admitted finished
+
+            # ---- one batched decode step over all in-flight sequences
+            t0 = time.time()
+            fresh = sched.ensure_pages()
+            cache = paged_kv.scrub_pages(cache, kinds, fresh)
+            b = sched.batch()
+            logits, cache = self._decode_paged(
+                self.params, jnp.asarray(b["tokens"]), cache,
+                jnp.asarray(b["block_tables"]), jnp.asarray(b["pos"]))
+            rows = np.asarray(logits[:, -1])
+            for i in running:
+                req = sched.slot(i).req
+                tok = self._next_token(req, rngs, rows[i:i + 1])
+                outputs[req.rid].append(tok)
+                stats.tokens_out += 1
+                sched.record(i, tok)
+            stats.decode_s += time.time() - t0
+            stats.steps += 1
+
+        return {"outputs": [np.asarray(outputs[r.rid], np.int32)
+                            for r in reqs],
+                "stats": stats}
+
+    # ---------------------------------------------------------- run helpers
+    @staticmethod
+    def _as_request(rid: int, r) -> Request:
+        if isinstance(r, Request):
+            return dataclasses.replace(r, rid=rid)
+        if isinstance(r, dict):
+            return Request(rid=rid, tokens=r["tokens"], n_new=r["n_new"],
+                           temperature=r.get("temperature", 0.0),
+                           seed=r.get("seed", 0))
+        tokens, n_new = r
+        return Request(rid=rid, tokens=tokens, n_new=n_new)
+
+    def _prefill_one(self, req: Request, page_size: int):
+        """Batch-1 prefill into a dense cache sized to whole pages.
+
+        The cache length only pads the KV store (prefill logits are computed
+        from the in-flight k/v, not read back), so rounding the prompt up to
+        a page multiple bounds jit variants without changing numerics."""
+        L = paged_kv.pages_needed(req.prompt_len, page_size) * page_size
+        dense = self.model.init_cache(1, L, dtype=self.cache_dtype)
+        logits, dense = self._prefill(
+            self.params, {"tokens": jnp.asarray(req.tokens[None])}, dense)
+        return logits, dense
+
+    def _next_token(self, req: Request, rngs: Dict[int, jax.Array],
+                    logits_row: np.ndarray) -> int:
+        """Sample/argmax one token, per-request rng stream (matches a
+        single-request generate(seed=req.seed) split-for-split)."""
+        if req.temperature > 0:
+            rng = rngs.get(req.rid)
+            if rng is None:
+                rng = jax.random.PRNGKey(req.seed)
+            rng, k = jax.random.split(rng)
+            rngs[req.rid] = rng
+            tok = jax.random.categorical(
+                k, jnp.asarray(logits_row).astype(jnp.float32)
+                / req.temperature, -1)
+            return int(np.asarray(tok)[0])
+        return int(np.argmax(logits_row[0]))

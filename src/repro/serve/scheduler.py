@@ -1,0 +1,206 @@
+"""Continuous-batching request scheduler for the paged serving engine.
+
+Iteration-level (Orca-style) scheduling: the decode batch is a fixed array
+of *slots*; at every engine step, finished sequences leave their slot and
+free their pages, and queued requests are admitted into free slots -- new
+work joins the decode batch between single-token steps instead of waiting
+for the whole batch to drain.
+
+State machine per request::
+
+    submit() -> QUEUED --admit()--> RUNNING --(n_new tokens)--> FINISHED
+                  ^                    |
+                  '-- stays queued if no free slot / not enough free pages
+
+Page lifecycle (the scheduler is the only allocator client):
+
+* **admit**: allocates ``ceil(prompt_len / page_size)`` pages for the
+  prompt; admission is refused (request stays queued, FIFO order kept)
+  unless that many pages *plus one decode page of headroom* are free.
+* **decode**: before each engine step, :meth:`ensure_pages` extends any
+  running sequence whose next write position crosses a page boundary by one
+  page.  If the pool is exhausted here, :class:`~.paged_kv.PagesExhausted`
+  propagates -- size the pool for the worst case (the engine's default
+  does) or accept admission backpressure as the only throttle.
+* **finish/release**: all of the sequence's pages go back to the free-list
+  and its block-table row resets to the trash page.
+
+The scheduler is pure host-side bookkeeping (numpy block tables, Python
+free-list): it never touches device arrays.  The engine owns jit'd model
+calls and asks the scheduler for the batch arrays each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.paged_kv import (POS_SENTINEL, BlockTables, PageAllocator,
+                                  pages_needed)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request: prompt tokens + decode budget."""
+    rid: int
+    tokens: np.ndarray            # (S,) int32 prompt
+    n_new: int                    # tokens to generate (>= 1)
+    temperature: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.tokens = np.asarray(self.tokens, np.int32).reshape(-1)
+        if self.tokens.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.n_new < 1:
+            raise ValueError(f"request {self.rid}: n_new must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.size)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Decode-batch slot state for one RUNNING request."""
+    req: Request
+    pos: int                      # next write position (= tokens seen so far)
+    out: List[int]                # emitted tokens
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.req.n_new
+
+
+_RESERVED = object()      # slot handed out by try_admit, awaiting bind()
+
+
+class Scheduler:
+    """Admission queue + slot table + page bookkeeping."""
+
+    def __init__(self, n_slots: int, page_size: int, blocks_per_seq: int,
+                 allocator: PageAllocator):
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.allocator = allocator
+        self.tables = BlockTables(n_slots, blocks_per_seq)
+        self._queue: Deque[Request] = deque()
+        self._slots: List[Optional[_Slot]] = [None] * n_slots
+        self.n_finished = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.running_slots())
+
+    def running_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots)
+                if isinstance(s, _Slot)]
+
+    def slot(self, i: int) -> _Slot:
+        s = self._slots[i]
+        assert isinstance(s, _Slot), f"slot {i} is not running"
+        return s
+
+    # ----------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def try_admit(self) -> Optional[Tuple[Request, int, List[int]]]:
+        """Admit the queue head if a slot and enough pages are free.
+
+        Returns (request, slot index, prompt pages in logical order), with
+        the pages already allocated and mapped, or None if the head must
+        wait (FIFO: later, smaller requests never jump the queue -- keeps
+        admission starvation-free).  The caller prefills the request,
+        scrubs + fills the pages, then calls :meth:`bind`.
+        """
+        if not self._queue:
+            return None
+        free_slot = next((i for i, s in enumerate(self._slots) if s is None),
+                         None)
+        if free_slot is None:
+            return None
+        req = self._queue[0]
+        need = pages_needed(req.prompt_len, self.page_size)
+        # positions ever written: 0 .. prompt+n_new-2 (the final emitted
+        # token is never fed back), so this is the request's lifetime total
+        total = pages_needed(req.prompt_len + req.n_new - 1, self.page_size)
+        if self.allocator.n_free < min(need + 1, total):
+            return None                          # wait: decode headroom
+        self._queue.popleft()
+        pages = self.allocator.alloc(need)
+        self.tables.append(free_slot, pages)
+        self._slots[free_slot] = _RESERVED     # until bind(); never batched
+        return req, free_slot, pages
+
+    def bind(self, slot: int, req: Request, first_token: int) -> bool:
+        """Install a prefilled request into its slot with its first emitted
+        token (sampled from the prefill logits).  Returns True if the
+        request is already finished (n_new == 1)."""
+        s = _Slot(req=req, pos=req.prompt_len, out=[int(first_token)])
+        self._slots[slot] = s
+        if s.done:
+            self._release(slot)
+            return True
+        return False
+
+    # -------------------------------------------------------------- decode
+    def ensure_pages(self) -> List[int]:
+        """Back every running sequence's next write position with a page.
+
+        Returns the newly allocated pages (caller must scrub their ``pos``
+        before the decode step).  Raises PagesExhausted if the pool cannot
+        grow a running sequence -- admission headroom makes this unreachable
+        unless the pool is smaller than one sequence's worst case."""
+        fresh: List[int] = []
+        for i in self.running_slots():
+            s = self.slot(i)
+            if s.pos // self.page_size >= self.tables.n_blocks(i):
+                page = self.allocator.alloc(1)
+                self.tables.append(i, page)
+                fresh.extend(page)
+        return fresh
+
+    def batch(self) -> Dict[str, np.ndarray]:
+        """Fixed-shape decode batch arrays.
+
+        Idle slots carry token 0, an all-trash block-table row, and --
+        load-bearing -- ``pos = POS_SENTINEL``: their lanes still execute
+        the KV write, and the sentinel both routes it to the trash page
+        (block index clips into the all-trash row) and makes the written
+        entry unattendable (the causal mask rejects sentinel positions).
+        An idle lane must never write a *real* position anywhere, or active
+        sequences gathering their own unmapped (trash) blocks would see a
+        fake valid KV entry."""
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        pos = np.full((self.n_slots,), POS_SENTINEL, np.int32)
+        for i in self.running_slots():
+            s = self.slot(i)
+            tokens[i, 0] = s.out[-1]
+            pos[i] = s.pos
+        return {"tokens": tokens, "pos": pos,
+                "block_tables": self.tables.as_array()}
+
+    def record(self, slot: int, token: int) -> bool:
+        """Record one decoded token; returns True (and releases the slot's
+        pages) when the request just finished."""
+        s = self.slot(slot)
+        s.out.append(int(token))
+        s.pos += 1
+        if s.done:
+            self._release(slot)
+            return True
+        return False
+
+    # ------------------------------------------------------------- release
+    def _release(self, slot: int) -> None:
+        self.allocator.free(self.tables.release(slot))
+        self._slots[slot] = None
+        self.n_finished += 1

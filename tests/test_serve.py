@@ -33,6 +33,23 @@ def test_engine_matches_full_forward_greedy():
     assert out["stats"].tokens_out == 10
 
 
+def test_engine_sliding_window_prompt_longer_than_window():
+    """Prompt > window: the ring cache must evict oldest-first during
+    decode.  Regression for the prefill ring misalignment that dropped a
+    still-in-window position on the first decode overwrite (caught by the
+    paged-engine parity tests)."""
+    cfg = ARCHS["gemma2-2b"].smoke
+    assert cfg.window is not None
+    model = LM(cfg)
+    params = model.init(KEY)
+    tokens = np.asarray(
+        jax.random.randint(KEY, (2, cfg.window + 3), 0, cfg.vocab))
+    eng = ServeEngine(model, params, max_len=32)
+    out = eng.generate(tokens, n_new=4)
+    ref = _greedy_ref(model, params, tokens, 4)
+    np.testing.assert_array_equal(out["tokens"], ref)
+
+
 def test_engine_with_quant_policy_runs():
     cfg = ARCHS["gemma2-2b"].smoke
     model = LM(cfg)
@@ -44,6 +61,43 @@ def test_engine_with_quant_policy_runs():
     out = eng.generate(tokens, n_new=4)
     assert out["tokens"].shape == (2, 4)
     assert (out["tokens"] >= 0).all() and (out["tokens"] < cfg.vocab).all()
+
+
+def test_weight_hbm_bytes_across_all_three_stores():
+    """weight_hbm_bytes() accounting for raw / fake-quant / packed stores.
+
+    raw and fake stores are all-dense f32 (fake-quant keeps full-size
+    tensors by design -- search-time numerics, no byte savings); the packed
+    store moves the searched weights into PackedWeight buffers and must
+    report a strictly smaller total on a sub-8-bit policy."""
+    cfg = ARCHS["gemma2-2b"].smoke
+    model = LM(cfg)
+    params = model.init(KEY)
+    graph = model.graph(seq_len=4, batch=2)
+    policy = QuantPolicy.uniform(graph, 4.0)
+
+    raw = ServeEngine(model, params, max_len=16).weight_hbm_bytes()
+    fake = ServeEngine(model, params, policy=policy, graph=graph,
+                       max_len=16).weight_hbm_bytes()
+    packed = ServeEngine(model, params, policy=policy, graph=graph,
+                         max_len=16,
+                         weight_store="packed").weight_hbm_bytes()
+
+    param_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree_util.tree_leaves(params))
+    for store in (raw, fake, packed):
+        assert store["total"] == (store["packed"] + store["int8"]
+                                  + store["dense"])
+    # raw: every leaf is dense, byte count is exactly the param pytree's
+    assert raw == {"packed": 0, "int8": 0, "dense": param_bytes,
+                   "total": param_bytes}
+    # fake: quantized values, full-precision storage
+    assert fake["packed"] == 0 and fake["int8"] == 0
+    assert fake["total"] == raw["total"]
+    # packed: searched weights leave the dense bucket into packed storage
+    assert packed["packed"] > 0
+    assert packed["dense"] < raw["dense"]
+    assert packed["total"] < 0.5 * raw["total"]    # 4-bit policy vs f32
 
 
 def test_quantized_engine_degrades_gracefully():
