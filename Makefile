@@ -4,7 +4,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench-packed bench-cb docs-check
+.PHONY: test test-all bench-packed bench-cb bench-attn docs-check
 
 test:
 	timeout 600 $(PY) -m pytest -x -q -m "not slow"
@@ -17,6 +17,9 @@ bench-packed:
 
 bench-cb:
 	$(PY) benchmarks/continuous_batching.py
+
+bench-attn:
+	$(PY) benchmarks/attention.py
 
 # every docs/ page must be reachable from docs/index.md (CI runs this too)
 docs-check:

@@ -7,7 +7,7 @@ cheap enough to drive DRL.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -68,26 +68,16 @@ def make_lm_evaluator(model, params, graph: QuantizableGraph, val_batch,
     position) block; graph sites of block p share p's activation QBN (the
     paper's own per-FC-layer collapse, extended per block -- DESIGN.md 4).
     """
-    cfg = model.cfg
     vb = {k: jnp.asarray(v) for k, v in val_batch.items()}
-    n_pat = len(cfg.pattern)
-
-    # map each graph layer (site) to its pattern position (or None=unembed)
-    site_pos: List[int] = []
-    for l in graph.layers:
-        site_pos.append(int(l.name[1:].split(".")[0])
-                        if l.name.startswith("p") else -1)
 
     @jax.jit
     def _eval(wbits_list, abits_list):
         qp = _quantize_params(params, graph, wbits_list, mode)
         # block act bits (n_repeat, n_pattern): every repeat shares the site's
         # scalar (stacked layout); unembed bits ignored (logits stay fp).
-        per_pos = []
-        for p in range(n_pat):
-            cand = [ab for sp, ab in zip(site_pos, abits_list) if sp == p]
-            per_pos.append(cand[0] if cand else jnp.float32(32.0))
-        act = jnp.tile(jnp.stack(per_pos)[None, :], (cfg.n_repeat, 1))
+        # model.block_act_bits is the single search->serve collapse (the
+        # serving engine maps a policy through the same helper).
+        act = model.block_act_bits(graph, abits_list)
         logits, _ = model.apply(qp, vb, act_bits=act)
         pred = jnp.argmax(logits, -1)
         mask = (vb["labels"] >= 0)

@@ -1,0 +1,333 @@
+"""Pallas attention subsystem: fused flash prefill + block-table paged decode.
+
+Two kernels cover the serving hot path (models/layers.py owns the
+``impl="pallas"|"ref"`` dispatch; the jnp chunked-flash path there is the
+bit-accuracy oracle both kernels are property-tested against):
+
+* :func:`flash_attention` -- tiled flash-attention forward for prefill (and
+  dense-cache decode, ``Sq == 1``).  Grid ``(B, Hkv, nq, nk)`` with the KV
+  axis innermost: the f32 accumulator, running max ``m`` and normalizer ``l``
+  live in VMEM scratch across the KV tiles of one q tile (online softmax),
+  so no (Sq, Skv) score matrix ever exists.  GQA is folded into the tile:
+  one program handles all ``G = Hq/Hkv`` query heads that share a KV head,
+  loading each K/V tile once per KV head instead of once per query head.
+  Causal, sliding-window and softcap masking run on the score tile in VMEM.
+
+* :func:`paged_decode_attention` -- block-table-aware decode over the paged
+  KV pool (serve/paged_kv.py layout).  The block table rides in as a
+  scalar-prefetch operand, so the BlockSpec index_map resolves
+  ``bt[seq, first[seq] + j]`` *before* each grid step and the pipeline DMAs
+  exactly that physical page HBM->VMEM -- there is no dense gather and no
+  (B, nb*page_size) intermediate.  For sliding-window blocks, ``first`` (the
+  oldest logical block still inside the window, precomputed per sequence)
+  re-bases the walk: out-of-window pages are never fetched.  Walk steps past
+  a sequence's last block clip onto its final block id and mask the whole
+  tile (Pallas skips the re-fetch when consecutive steps map to the same
+  block, so the clip costs no extra HBM traffic).
+
+int8 KV pages (``kv_bits=8`` pool): when the pool stores int8, the kernel
+streams the packed page plus its per-(slot, head) scale page into VMEM and
+dequantizes there -- KV HBM traffic stays 1 byte/element; f32 only ever
+exists on-chip.
+
+Numerics shared by both kernels (matching the jnp oracle step for step):
+scores, softmax statistics and accumulation are f32 regardless of input
+dtype; masked slots contribute exact zeros (``exp(-inf - m_safe) == 0``);
+position ``POS_SENTINEL`` (int32 max) is unconditionally unattendable; an
+all-masked row normalizes by ``max(l, 1e-30)`` to exact zeros.  With one KV
+tile the update degenerates to the oracle's single-shot softmax (``alpha``
+is exactly 0 on the first tile, exactly 1 on tiles that do not move the
+running max), so small shapes reproduce the reference bit for bit; multiple
+tiles differ only by documented f32 rescale rounding (~1e-7).
+
+Kernels validate under ``interpret=True`` on CPU (the test path); TPU is the
+compile target.  Off-TPU the wrappers skip lane padding so the contraction
+lengths -- and therefore the f32 rounding -- match the oracle exactly; on
+TPU they pad the head dim to the 128-lane boundary (zero columns are exact).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+INTERPRET = not _ON_TPU
+
+NEG_INF = float("-inf")
+POS_SENTINEL = np.iinfo(np.int32).max
+_LANES = 128                 # TPU vector lane count (last-dim tile unit)
+
+
+def _pad_axis(x, mult, axis, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _mask_tile(s, qp, kp, *, causal, window):
+    """Mask a (rows, bk) score tile.  qp (rows, 1) / kp (1, bk) int32.
+
+    The sentinel test makes padded / scrubbed / trash slots unattendable even
+    for idle decode lanes whose own q_pos is the sentinel (the oracle leaves
+    those lanes attending trash; their outputs are ignored either way).
+    """
+    mask = kp != POS_SENTINEL
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    return jnp.where(mask, s, NEG_INF)
+
+
+def _online_update(s, vt, acc_ref, m_ref, l_ref):
+    """One online-softmax accumulation step over a masked score tile.
+
+    Mirrors the oracle's scan body exactly: on the first tile ``alpha`` is 0
+    and the update reduces to single-shot softmax; on tiles that leave the
+    running max unchanged ``alpha == exp(0) == 1`` and the accumulate is
+    exact.  ``m``/``l`` are lane-replicated (rows, _LANES) VMEM scratch.
+    """
+    m_prev = m_ref[:, :1]
+    l_prev = l_ref[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    pv = jax.lax.dot_general(p, vt, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(
+        l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True), l_ref.shape)
+
+
+def _finalize(acc_ref, l_ref, shape, dtype):
+    o = acc_ref[...] / jnp.maximum(l_ref[:, :1], 1e-30)
+    return o.reshape(shape).astype(dtype)
+
+
+# ------------------------------------------------------------ flash prefill
+def _flash_kernel(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, nk, causal, window, cap, scale,
+                  G):
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    bq, D = q_ref.shape[1], q_ref.shape[3]
+    qt = (q_ref[0].astype(jnp.float32) * scale).reshape(bq * G, D)
+    kt = k_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(qt, kt, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq*G, bk)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qp = jnp.repeat(qp_ref[0, :], G)[:, None]
+    s = _mask_tile(s, qp, kp_ref[0, :][None, :], causal=causal, window=window)
+    _online_update(s, v_ref[0, :, 0, :].astype(jnp.float32),
+                   acc_ref, m_ref, l_ref)
+
+    @pl.when(j == nk - 1)
+    def _done():
+        o_ref[0] = _finalize(acc_ref, l_ref, (bq, G, D), o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "attn_cap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+                    attn_cap=None, bq=128, bk=128, interpret=INTERPRET):
+    """Tiled flash-attention forward (prefill / dense-cache decode).
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); q_pos: (B, Sq) int32;
+    kv_pos: (B, Skv) int32.  Returns (B, Sq, Hq, D) in q.dtype.  Pure
+    function of positions: causal / sliding-window validity comes from
+    comparing q_pos against kv_pos, so ring-buffer (rolled) caches and
+    padded tails (position == sentinel) need no extra arguments.
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    bq = min(bq, -(-Sq // 8) * 8)
+    bk = min(bk, -(-Skv // 8) * 8)
+    q_ = _pad_axis(q, bq, 1)
+    k_ = _pad_axis(k, bk, 1)
+    v_ = _pad_axis(v, bk, 1)
+    # padded q rows mask everything (causal qp=0 / sentinel kp) -> sliced off;
+    # padded kv slots carry the sentinel position -> never attended
+    qp_ = _pad_axis(q_pos.astype(jnp.int32), bq, 1)
+    kp_ = _pad_axis(kv_pos.astype(jnp.int32), bk, 1, value=POS_SENTINEL)
+    if not interpret:            # TPU lane alignment; zero columns are exact
+        q_, k_, v_ = (_pad_axis(x, _LANES, 3) for x in (q_, k_, v_))
+    Dp = q_.shape[3]
+    nq, nk = q_.shape[1] // bq, k_.shape[1] // bk
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, nk=nk, causal=causal, window=window,
+                          cap=attn_cap, scale=scale, G=G),
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, G, Dp), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dp), lambda b, h, i, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, Dp), lambda b, h, i, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, G, Dp),
+                               lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, q_.shape[1], Hq, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq * G, Dp), jnp.float32),
+            pltpu.VMEM((bq * G, _LANES), jnp.float32),
+            pltpu.VMEM((bq * G, _LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_, k_, v_, qp_, kp_)
+    return out[:, :Sq, :, :D]
+
+
+# ------------------------------------------------------- paged decode
+def _paged_kernel(bt_ref, qp_ref, first_ref, q_ref, k_ref, v_ref, pos_ref,
+                  *rest, nb, window, cap, scale, G, quant):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    D = q_ref.shape[3]
+    qt = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+    kt = k_ref[0, :, 0, :].astype(jnp.float32)            # (ps, D)
+    vt = v_ref[0, :, 0, :].astype(jnp.float32)
+    if quant:                  # int8 pages: dequantize in VMEM, not in HBM
+        kt = kt * ks_ref[0, :, 0][:, None]
+        vt = vt * vs_ref[0, :, 0][:, None]
+    s = jax.lax.dot_general(qt, kt, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, ps)
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    qp = jnp.full((s.shape[0], 1), qp_ref[b], jnp.int32)
+    s = _mask_tile(s, qp, pos_ref[0][None, :], causal=True, window=window)
+    # walk steps past the last logical block were clipped onto block nb-1 by
+    # the index_map: mask the duplicate tile entirely
+    s = jnp.where(first_ref[b] + j < nb, s, NEG_INF)
+    _online_update(s, vt, acc_ref, m_ref, l_ref)
+
+    @pl.when(j == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0, 0] = _finalize(acc_ref, l_ref, (G, D), o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "attn_cap",
+                                             "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
+                           q_pos, window=None, attn_cap=None,
+                           k_scale_pages=None, v_scale_pages=None,
+                           interpret=INTERPRET):
+    """Decode attention that walks the block table, page by page.
+
+    q: (B, 1, Hq, D); ``*_pages``: (P, page_size, Hkv, D) physical pool
+    (``pos_pages`` (P, page_size) int32); block_tables: (B, nb) int32;
+    q_pos: (B, 1) (or (B,)) int32 per-sequence positions.  int8 pools pass
+    ``k_scale_pages`` / ``v_scale_pages`` (P, page_size, Hkv) f32 and the
+    kernel dequantizes in VMEM.  Returns (B, 1, Hq, D) in q.dtype.
+
+    Grid (B, Hkv, nb): step ``j`` of sequence ``b`` DMAs physical page
+    ``bt[b, min(first[b]+j, nb-1)]`` (index_map over the scalar-prefetched
+    table).  ``first`` skips the logical blocks wholly below the sliding
+    window, so out-of-window pages never leave HBM; not-yet-grown tail
+    blocks point at the trash page whose slots are all-sentinel.  Idle lanes
+    (q_pos == sentinel) produce zeros (every slot masks); the scheduler
+    ignores their rows either way.
+    """
+    B, _, Hq, D = q.shape
+    P, ps, Hkv, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    G = Hq // Hkv
+    quant = k_pages.dtype == jnp.int8
+    assert quant == (k_scale_pages is not None), \
+        "int8 pools require scale pages (and f32/bf16 pools must not pass them)"
+    scale = 1.0 / math.sqrt(D)
+    qp = q_pos.reshape(B).astype(jnp.int32)
+    if window is not None:
+        # oldest logical block with any position > qp - window still in it
+        first = jnp.clip((qp - (window - 1)) // ps, 0, nb - 1)
+    else:
+        first = jnp.zeros((B,), jnp.int32)
+
+    q_, k_, v_ = q, k_pages, v_pages
+    pos_ = pos_pages
+    if not interpret:            # TPU alignment: slot sublanes + head lanes
+        k_ = _pad_axis(k_, 8, 1)
+        v_ = _pad_axis(v_, 8, 1)
+        pos_ = _pad_axis(pos_, 8, 1, value=POS_SENTINEL)
+        q_, k_, v_ = (_pad_axis(x, _LANES, 3) for x in (q_, k_, v_))
+        if quant:
+            k_scale_pages = _pad_axis(k_scale_pages, 8, 1)
+            v_scale_pages = _pad_axis(v_scale_pages, 8, 1)
+    psp, Dp = k_.shape[1], k_.shape[3]
+
+    def page_map(b, h, j, bt, qpr, fr):
+        blk = jnp.minimum(fr[b] + j, nb - 1)
+        return (bt[b, blk], 0, h, 0)
+
+    def pos_map(b, h, j, bt, qpr, fr):
+        blk = jnp.minimum(fr[b] + j, nb - 1)
+        return (bt[b, blk], 0)
+
+    def q_map(b, h, j, bt, qpr, fr):
+        return (b, 0, h, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, Dp), q_map),
+        pl.BlockSpec((1, psp, 1, Dp), page_map),
+        pl.BlockSpec((1, psp, 1, Dp), page_map),
+        pl.BlockSpec((1, psp), pos_map),
+    ]
+    operands = [q_, k_, v_, pos_]
+    if quant:
+        def scale_map(b, h, j, bt, qpr, fr):     # (P, ps, Hkv): 3-d blocks
+            blk = jnp.minimum(fr[b] + j, nb - 1)
+            return (bt[b, blk], 0, h)
+
+        in_specs += [pl.BlockSpec((1, psp, 1), scale_map),
+                     pl.BlockSpec((1, psp, 1), scale_map)]
+        operands += [k_scale_pages, v_scale_pages]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G, Dp), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, Dp), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((G, _LANES), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, nb=nb, window=window, cap=attn_cap,
+                          scale=scale, G=G, quant=quant),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dp), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), qp, first, *operands)
+    return out[..., :D]

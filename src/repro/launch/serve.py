@@ -25,6 +25,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--n-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attn-impl", choices=("pallas", "ref"),
+                    default="pallas",
+                    help="attention backend (ref = jnp oracle path)")
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    help="8 = int8 KV cache (dense and paged)")
     args = ap.parse_args()
 
     spec = get(args.arch)
@@ -41,7 +46,9 @@ def main():
         policy = QuantPolicy.uniform(graph, args.bits)
 
     eng = ServeEngine(model, params, policy=policy, graph=graph,
-                      max_len=args.prompt_len + args.n_new)
+                      max_len=args.prompt_len + args.n_new,
+                      attn_impl=args.attn_impl,
+                      kv_bits=args.kv_bits or None)
     prompts = TokenStream(vocab=cfg.vocab).batch(
         0, args.batch, args.prompt_len)["tokens"]
     out = eng.generate(prompts, n_new=args.n_new,

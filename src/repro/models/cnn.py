@@ -15,8 +15,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.layers import maybe_quant_act
+from repro.quant.linear_quant import fake_quant
 from repro.quant.policy import LayerInfo, QuantizableGraph
+
+
+def _quant_act(x, bits):
+    """Per-tensor activation fake-quant -- the paper's CNN regime (one
+    dynamic scale per layer activation).  The LM stack instead quantizes
+    per token (layers.maybe_quant_act): batch-coupled scales would break
+    continuous-batching parity there, but the CNN search/QAT pipeline is
+    calibrated -- and its accuracy-recovery tests pinned -- on the
+    per-tensor quantizer."""
+    if bits is None:
+        return x
+    return fake_quant(x, bits, axis=None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,7 +80,7 @@ class CNN:
             return None if act_bits is None else act_bits.get(name)
 
         for i in range(len(cfg.channels)):
-            x = maybe_quant_act(x, ab(f"conv{i}"))
+            x = _quant_act(x, ab(f"conv{i}"))
             p = params[f"conv{i}"]
             x = jax.lax.conv_general_dilated(
                 x, p["w"], window_strides=(1, 1), padding="SAME",
@@ -79,7 +91,7 @@ class CNN:
                     x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
                     "VALID")
         x = jnp.mean(x, axis=(1, 2))                 # global average pool
-        x = maybe_quant_act(x, ab("fc"))
+        x = _quant_act(x, ab("fc"))
         return x @ params["fc"]["w"] + params["fc"]["b"]
 
     def loss(self, params, batch, act_bits=None):

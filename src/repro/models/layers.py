@@ -1,10 +1,20 @@
-"""Core LM layers: RMSNorm, RoPE, (chunked/flash) GQA attention, SwiGLU FFN,
+"""Core LM layers: RMSNorm, RoPE, GQA attention, SwiGLU FFN,
 capacity-based top-k MoE.  Pure functions over explicit parameter dicts.
 
-Attention is computed with a running-logsumexp scan over KV chunks
-(flash-attention schedule in jnp) so prefill at 32k..512k sequence lengths
-never materializes an (Sq, Skv) score matrix.  This is also the pure-jnp
-reference for any future Pallas attention kernel.
+Attention dispatches between two backends through an ``impl`` selector:
+
+* ``impl="ref"`` (default) -- a running-logsumexp scan over KV chunks
+  (flash-attention schedule in jnp) so prefill at 32k..512k sequence
+  lengths never materializes an (Sq, Skv) score matrix.  This is the
+  bit-accuracy oracle; the train path always uses it.
+* ``impl="pallas"`` -- the fused kernels in ``kernels/attention.py``: a
+  tiled flash forward for prefill/dense decode, and a block-table-aware
+  paged decode kernel that streams KV pages into VMEM instead of running
+  the dense ``paged_gather``.  The serving engine defaults to this path.
+
+``attention`` / ``paged_attention`` are the dispatchers; ``attention_ref``
+/ ``paged_attention_ref`` are the jnp implementations (kept public: tests
+pin them as the oracle).  ``impl`` must be static under jit.
 """
 from __future__ import annotations
 
@@ -15,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.pack import PackedWeight
-from repro.quant.linear_quant import fake_quant
+from repro.quant.linear_quant import fake_quant_per_token
 
 NEG_INF = float("-inf")
 
@@ -85,10 +95,17 @@ def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
 
 
 def maybe_quant_act(x: jnp.ndarray, bits) -> jnp.ndarray:
-    """Per-tensor activation fake-quant; bits None/static-0 disables."""
+    """Per-token activation fake-quant; bits None/static-0 disables.
+
+    Row-wise dynamic scales (amax over the model dim) keep each token's
+    quantization independent of its batch: a continuous-batching decode
+    step quantizes a sequence's activation exactly as the batch-1 oracle
+    would -- the invariant behind run()/generate() parity under a policy
+    with activation QBNs (tests/test_paged_kv.py).
+    """
     if bits is None:
         return x
-    return fake_quant(x, bits, axis=None)
+    return fake_quant_per_token(x, bits)
 
 
 # ------------------------------------------------------------------ attention
@@ -107,12 +124,44 @@ def _mask_scores(s, q_pos, kv_pos, *, causal, window, kv_valid_len):
     return jnp.where(mask, s, NEG_INF)
 
 
+ATTN_IMPLS = ("ref", "pallas")
+
+
+def _check_impl(impl):
+    impl = impl or "ref"
+    if impl not in ATTN_IMPLS:
+        raise ValueError(f"unknown attention impl {impl!r}; "
+                         f"expected one of {ATTN_IMPLS}")
+    return impl
+
+
 def attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
-              attn_cap=None, kv_valid_len=None, chunk=1024):
-    """GQA attention with a flash (running-softmax) scan over KV chunks.
+              attn_cap=None, kv_valid_len=None, chunk=1024, impl=None):
+    """GQA attention dispatcher: ``impl="ref"`` (jnp oracle, default) or
+    ``"pallas"`` (kernels/attention.flash_attention).
 
     q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); q_pos: (B, Sq) int32;
-    kv_pos: (B, Skv) int32.  Returns (B, Sq, Hq, D) in q.dtype.
+    kv_pos: (B, Skv) int32.  Returns (B, Sq, Hq, D) in q.dtype.  ``impl``
+    must be static under jit; ``kv_valid_len`` (ragged prefill batches)
+    stays on the ref path -- the kernels express validity through positions
+    alone.  ``chunk`` applies to the ref path only.
+    """
+    impl = _check_impl(impl)
+    if impl == "pallas" and kv_valid_len is None:
+        from repro.kernels.attention import flash_attention
+        return flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                               causal=causal, window=window,
+                               attn_cap=attn_cap)
+    return attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                         window=window, attn_cap=attn_cap,
+                         kv_valid_len=kv_valid_len, chunk=chunk)
+
+
+def attention_ref(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
+                  attn_cap=None, kv_valid_len=None, chunk=1024):
+    """GQA attention with a flash (running-softmax) scan over KV chunks.
+
+    The pure-jnp oracle the Pallas kernels are property-tested against.
     """
     B, Sq, Hq, D = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
@@ -184,21 +233,54 @@ def paged_gather(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
 
 
 def paged_attention(q, k_pages, v_pages, pos_pages, block_tables, *, q_pos,
-                    causal=True, window=None, attn_cap=None):
-    """Decode attention over a paged KV pool.
+                    causal=True, window=None, attn_cap=None,
+                    k_scale_pages=None, v_scale_pages=None, impl=None):
+    """Decode attention over a paged KV pool: dispatcher.
 
     q: (B, 1, Hq, D); ``*_pages``: (P, page_size, Hkv, D) (``pos_pages``
-    (P, page_size) int32); block_tables: (B, nb).  Gathers each sequence's
-    pages into logical order and runs the standard masked flash attention --
-    slots whose position is the sentinel (unwritten, scrubbed, or trash)
-    mask to -inf exactly like the dense cache's convention, so the result
+    (P, page_size) int32); block_tables: (B, nb).  int8 pools carry
+    per-(slot, head) ``*_scale_pages`` (P, page_size, Hkv) f32.
+
+    ``impl="ref"`` (default) gathers each sequence's pages into logical
+    order and runs the standard masked flash attention; ``"pallas"``
+    (kernels/attention.paged_decode_attention) walks the block table
+    in-kernel, streaming pages into VMEM with no dense gather.  Slots whose
+    position is the sentinel (unwritten, scrubbed, or trash) mask to -inf
+    exactly like the dense cache's convention on both paths, so the result
     matches dense-cache decode on the same written positions.
+    """
+    impl = _check_impl(impl)
+    if impl == "pallas" and causal:
+        from repro.kernels.attention import paged_decode_attention
+        return paged_decode_attention(
+            q, k_pages, v_pages, pos_pages, block_tables, q_pos=q_pos,
+            window=window, attn_cap=attn_cap, k_scale_pages=k_scale_pages,
+            v_scale_pages=v_scale_pages)
+    return paged_attention_ref(
+        q, k_pages, v_pages, pos_pages, block_tables, q_pos=q_pos,
+        causal=causal, window=window, attn_cap=attn_cap,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages)
+
+
+def paged_attention_ref(q, k_pages, v_pages, pos_pages, block_tables, *,
+                        q_pos, causal=True, window=None, attn_cap=None,
+                        k_scale_pages=None, v_scale_pages=None):
+    """jnp oracle for paged decode: dense gather + masked flash attention.
+
+    The gather materializes each sequence's whole (nb*page_size) KV window
+    -- the HBM round trip the Pallas kernel exists to avoid; int8 pools
+    additionally dequantize the entire gathered window to f32 here.
     """
     k = paged_gather(k_pages, block_tables)
     v = paged_gather(v_pages, block_tables)
     kv_pos = paged_gather(pos_pages, block_tables)
-    return attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
-                     window=window, attn_cap=attn_cap, chunk=k.shape[1])
+    if k_scale_pages is not None:
+        ks = paged_gather(k_scale_pages, block_tables)
+        vs = paged_gather(v_scale_pages, block_tables)
+        k = k.astype(jnp.float32) * ks[..., None]
+        v = v.astype(jnp.float32) * vs[..., None]
+    return attention_ref(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
+                         window=window, attn_cap=attn_cap, chunk=k.shape[1])
 
 
 # ----------------------------------------------------------------------- FFN

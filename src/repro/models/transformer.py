@@ -150,13 +150,16 @@ class LM:
     # ---------------------------------------------------------------- blocks
     def _attn_block(self, bp, bdef, x, *, q_pos, mode, img_embeds=None,
                     cache=None, write_pos=None, act_bits=None,
-                    block_tables=None):
+                    block_tables=None, attn_impl=None):
         """Self- or cross-attention + residual.  Returns (x, new_cache).
 
         block_tables (decode only): (B, nb) int32 physical page ids -- the
         cache entry is then a paged pool (P, page_size, Hkv, hd) shared by
-        the batch, written through the table and gathered back per sequence
-        (``write_pos`` is per-sequence (B,) in that mode)."""
+        the batch, written through the table and attended per sequence
+        (``write_pos`` is per-sequence (B,) in that mode).  An int8 pool
+        (``init_paged_cache(kv_bits=8)``) quantizes the write and carries
+        per-(slot, head) scale pages.  ``attn_impl`` selects the attention
+        backend (layers.ATTN_IMPLS; None -> "ref"); it must be static."""
         cfg = self.cfg
         B, S, _ = x.shape
         Hq, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hdim
@@ -185,7 +188,7 @@ class LM:
             k = rope(k, q_pos, cfg.rope_theta)
             kv_pos = q_pos
             if cache is not None:
-                if block_tables is not None:        # paged decode write+gather
+                if block_tables is not None:        # paged decode write+attend
                     ps = cache["k"].shape[-3]
                     # idle lanes carry write_pos == POS_SENTINEL: clip their
                     # (huge) block index into the all-trash table row, and
@@ -195,16 +198,26 @@ class LM:
                                                axis=1, mode="clip")[:, 0]
                     pslot = write_pos % ps
                     new_cache = dict(cache)
-                    new_cache["k"] = cache["k"].at[phys, pslot].set(
-                        k[:, 0].astype(cache["k"].dtype))
-                    new_cache["v"] = cache["v"].at[phys, pslot].set(
-                        v[:, 0].astype(cache["v"].dtype))
+                    if cache["k"].dtype == jnp.int8:   # quantized page write
+                        for key, val in (("k", k), ("v", v)):
+                            qv, sv = _kv_quant(val)
+                            new_cache[key] = cache[key].at[phys, pslot].set(
+                                qv[:, 0])
+                            new_cache[key + "_s"] = \
+                                cache[key + "_s"].at[phys, pslot].set(sv[:, 0])
+                    else:
+                        new_cache["k"] = cache["k"].at[phys, pslot].set(
+                            k[:, 0].astype(cache["k"].dtype))
+                        new_cache["v"] = cache["v"].at[phys, pslot].set(
+                            v[:, 0].astype(cache["v"].dtype))
                     new_cache["pos"] = cache["pos"].at[phys, pslot].set(
                         write_pos.astype(jnp.int32))
                     out = paged_attention(
                         q, new_cache["k"], new_cache["v"], new_cache["pos"],
                         block_tables, q_pos=q_pos, causal=causal,
-                        window=window, attn_cap=cfg.attn_softcap)
+                        window=window, attn_cap=cfg.attn_softcap,
+                        k_scale_pages=new_cache.get("k_s"),
+                        v_scale_pages=new_cache.get("v_s"), impl=attn_impl)
                     x = x + out.reshape(B, S, Hq * hd) @ wrow(bp["wo"])
                     return x, new_cache
                 W = cache["k"].shape[1]
@@ -231,7 +244,8 @@ class LM:
                     new_cache = _kv_write(cache, kw, vw, pw, 0)
         chunk = k.shape[1] if S == 1 else 1024
         out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
-                        window=window, attn_cap=cfg.attn_softcap, chunk=chunk)
+                        window=window, attn_cap=cfg.attn_softcap, chunk=chunk,
+                        impl=attn_impl)
         x = x + out.reshape(B, S, Hq * hd) @ wrow(bp["wo"])
         return x, new_cache
 
@@ -251,7 +265,7 @@ class LM:
 
     def _apply_block(self, bp, bdef: BlockDef, x, *, q_pos, mode,
                      img_embeds=None, cache=None, write_pos=None,
-                     act_bits=None, block_tables=None):
+                     act_bits=None, block_tables=None, attn_impl=None):
         if bdef.kind == "mamba":
             h = rmsnorm(x, bp["norm"], self.cfg.norm_eps)
             h = maybe_quant_act(h, act_bits)
@@ -271,7 +285,7 @@ class LM:
                 bp, bdef, x, q_pos=q_pos, mode=mode, img_embeds=img_embeds,
                 cache=cache, write_pos=write_pos, act_bits=act_bits,
                 block_tables=None if bdef.kind == "cross_attn"
-                else block_tables)
+                else block_tables, attn_impl=attn_impl)
         aux = jnp.float32(0.0)
         if bdef.has_ffn:
             x, aux = self._ffn(bp, bdef, x, act_bits=act_bits)
@@ -429,7 +443,7 @@ class LM:
         return tuple(caches)
 
     def init_paged_cache(self, n_slots: int, num_pages: int, page_size: int,
-                         dtype=jnp.bfloat16):
+                         dtype=jnp.bfloat16, kv_bits: Optional[int] = None):
         """Paged decode cache for the continuous-batching engine.
 
         Per pattern position (stacked over n_repeat like ``init_cache``),
@@ -444,20 +458,30 @@ class LM:
           caches with batch axis ``n_slots``, exactly the single-batch
           layouts, since neither grows with decoded length.
 
-        int8 KV (``kv_bits``) is not yet threaded through the paged pool;
-        use the dense engine path for quantized KV serving.
+        ``kv_bits=8`` stores K/V pages int8 with one scale page per KV page
+        (``"k_s","v_s": (R, P, ps, Hkv) f32``, per-(slot, head) scales) --
+        the same quantizer as the dense cache (``_kv_quant``), so paged
+        serving is bit-identical to dense int8 decode; the Pallas decode
+        kernel dequantizes the pages in VMEM.
         """
         cfg = self.cfg
+        kv_dt = jnp.int8 if kv_bits == 8 else dtype
 
         def kv_pages():
-            return {
+            one = {
                 "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
-                                cfg.hdim), dtype),
+                                cfg.hdim), kv_dt),
                 "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads,
-                                cfg.hdim), dtype),
+                                cfg.hdim), kv_dt),
                 "pos": jnp.full((num_pages, page_size), POS_SENTINEL,
                                 jnp.int32),
             }
+            if kv_bits == 8:
+                one["k_s"] = jnp.ones((num_pages, page_size,
+                                       cfg.n_kv_heads), jnp.float32)
+                one["v_s"] = jnp.ones((num_pages, page_size,
+                                       cfg.n_kv_heads), jnp.float32)
+            return one
 
         caches = []
         for bdef, kind in zip(cfg.pattern, cfg.cache_kinds()):
@@ -480,8 +504,13 @@ class LM:
         return tuple(caches)
 
     # ------------------------------------------------------------ prefill
-    def prefill(self, params, batch, cache, act_bits=None):
-        """Run the prompt, fill the cache, return last-token logits."""
+    def prefill(self, params, batch, cache, act_bits=None, attn_impl=None):
+        """Run the prompt, fill the cache, return last-token logits.
+
+        act_bits: optional (n_repeat, len(pattern)) activation QBN array --
+        the same per-block hook ``apply`` takes, so a searched policy's
+        activation bits follow the model into serving.  attn_impl: static
+        attention backend selector (layers.ATTN_IMPLS)."""
         cfg = self.cfg
         x = self._embed(params, batch)
         B, S, _ = x.shape
@@ -489,25 +518,37 @@ class LM:
         img_embeds = batch.get("img_embeds")
 
         def repeat_body(x, xs):
-            blocks_slice, cache_slice = xs
+            blocks_slice, cache_slice, ab_slice = xs
             new_slices = []
             for p_idx, bdef in enumerate(cfg.pattern):
+                ab = None if ab_slice is None else ab_slice[p_idx]
                 x, nc, _ = self._apply_block(
                     blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="prefill",
-                    img_embeds=img_embeds, cache=cache_slice[p_idx])
+                    img_embeds=img_embeds, cache=cache_slice[p_idx],
+                    act_bits=ab, attn_impl=attn_impl)
                 x = constrain(x, "hidden")
                 new_slices.append(nc)
             return x, tuple(new_slices)
 
-        x, new_cache = jax.lax.scan(repeat_body, x,
-                                    (params["blocks"], cache))
+        body, xs = self._with_act_bits(repeat_body, params, cache, act_bits)
+        x, new_cache = jax.lax.scan(body, x, xs)
         logits = self.logits_of(params, x[:, -1:, :])
         return logits, new_cache
 
+    @staticmethod
+    def _with_act_bits(repeat_body, params, cache, act_bits):
+        """Scan inputs for a cached step, with or without the act-QBN rows."""
+        if act_bits is None:
+            return (lambda c, xs: repeat_body(c, xs + (None,)),
+                    (params["blocks"], cache))
+        return repeat_body, (params["blocks"], cache, act_bits)
+
     # ------------------------------------------------------------- decode
-    def decode_step(self, params, tokens, cache, pos, act_bits=None):
+    def decode_step(self, params, tokens, cache, pos, act_bits=None,
+                    attn_impl=None):
         """One decode step.  tokens: (B, 1) int32 (or (B, 1, d) embeds for
-        audio_stub); pos: scalar int32.  Returns (logits, new_cache)."""
+        audio_stub); pos: scalar int32.  act_bits / attn_impl as in
+        :meth:`prefill`.  Returns (logits, new_cache)."""
         cfg = self.cfg
         if cfg.frontend == "audio_stub":
             x = tokens
@@ -518,22 +559,25 @@ class LM:
         q_pos = jnp.full((B, 1), pos, jnp.int32)
 
         def repeat_body(x, xs):
-            blocks_slice, cache_slice = xs
+            blocks_slice, cache_slice, ab_slice = xs
             new_slices = []
             for p_idx, bdef in enumerate(cfg.pattern):
+                ab = None if ab_slice is None else ab_slice[p_idx]
                 x, nc, _ = self._apply_block(
                     blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="decode",
-                    cache=cache_slice[p_idx], write_pos=pos)
+                    cache=cache_slice[p_idx], write_pos=pos, act_bits=ab,
+                    attn_impl=attn_impl)
                 x = constrain(x, "hidden")
                 new_slices.append(nc if nc is not None else cache_slice[p_idx])
             return x, tuple(new_slices)
 
-        x, new_cache = jax.lax.scan(repeat_body, x, (params["blocks"], cache))
+        body, xs = self._with_act_bits(repeat_body, params, cache, act_bits)
+        x, new_cache = jax.lax.scan(body, x, xs)
         return self.logits_of(params, x), new_cache
 
     # ------------------------------------------------------ paged decode
     def decode_step_paged(self, params, tokens, cache, block_tables, pos,
-                          act_bits=None):
+                          act_bits=None, attn_impl=None):
         """One decode step over a paged KV pool, per-sequence positions.
 
         tokens: (B, 1) int32; block_tables: (B, nb) int32 physical page ids
@@ -542,7 +586,8 @@ class LM:
         ``decode_step``'s single scalar).  ``cache`` is an
         ``init_paged_cache`` tuple.  Inactive batch slots carry all-trash
         block tables: their writes land in page 0 and their outputs are
-        garbage the scheduler ignores.  Returns (logits, new_cache)."""
+        garbage the scheduler ignores.  act_bits / attn_impl as in
+        :meth:`prefill`.  Returns (logits, new_cache)."""
         cfg = self.cfg
         x = self._embed_tokens(params, tokens)
         x = constrain(x, "hidden")
@@ -550,19 +595,53 @@ class LM:
         q_pos = pos.astype(jnp.int32)[:, None]
 
         def repeat_body(x, xs):
-            blocks_slice, cache_slice = xs
+            blocks_slice, cache_slice, ab_slice = xs
             new_slices = []
             for p_idx, bdef in enumerate(cfg.pattern):
+                ab = None if ab_slice is None else ab_slice[p_idx]
                 x, nc, _ = self._apply_block(
                     blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="decode",
                     cache=cache_slice[p_idx], write_pos=pos,
-                    block_tables=block_tables)
+                    block_tables=block_tables, act_bits=ab,
+                    attn_impl=attn_impl)
                 x = constrain(x, "hidden")
                 new_slices.append(nc if nc is not None else cache_slice[p_idx])
             return x, tuple(new_slices)
 
-        x, new_cache = jax.lax.scan(repeat_body, x, (params["blocks"], cache))
+        body, xs = self._with_act_bits(repeat_body, params, cache, act_bits)
+        x, new_cache = jax.lax.scan(body, x, xs)
         return self.logits_of(params, x), new_cache
+
+    # -------------------------------------------------- activation QBNs
+    def block_act_bits(self, graph: QuantizableGraph, values,
+                       default: float = None) -> jnp.ndarray:
+        """Collapse per-graph-site activation QBNs onto the model's hook.
+
+        The forward takes one activation scalar per (repeat, pattern
+        position) block; ``values`` is a sequence aligned with
+        ``graph.layers`` (floats or traced scalars).  All sites of pattern
+        position ``p`` share ``p``'s scalar and the *first* site wins --
+        the block's input projection (``wq`` / ``w_xz``), whose input
+        activation is the one the hook quantizes; ``wk``/``wv``/FFN share
+        it.  Positions with no searched site (and the unembed, whose
+        logits stay fp) get ``default`` (FULL_BITS pass-through).  This is
+        the single source of the search->serve collapse: both the
+        evaluator (core/evaluate.py) and the engine use it, so search-time
+        evaluation and serving quantize activations identically.
+        """
+        from repro.quant.linear_quant import FULL_BITS
+        if default is None:
+            default = float(FULL_BITS)
+        n_pat = len(self.cfg.pattern)
+        site_pos = [int(l.name[1:].split(".")[0])
+                    if l.name.startswith("p") else -1 for l in graph.layers]
+        per_pos = []
+        for p in range(n_pat):
+            cand = [v for sp, v in zip(site_pos, values) if sp == p]
+            per_pos.append(jnp.asarray(cand[0] if cand else default,
+                                       jnp.float32))
+        row = jnp.stack(per_pos)
+        return jnp.tile(row[None, :], (self.cfg.n_repeat, 1))
 
     # ------------------------------------------------------- quant graph
     def graph(self, seq_len: int, batch: int,

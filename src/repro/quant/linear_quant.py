@@ -59,6 +59,30 @@ def fake_quant_per_channel(w: jnp.ndarray, bits_per_channel, axis: int = -1):
     return fake_quant(w, bits_per_channel, axis=axis)
 
 
+def fake_quant_per_token(x: jnp.ndarray, bits) -> jnp.ndarray:
+    """Row-wise (per-token) fake quantization: one dynamic scale per
+    leading-index row, amax over the last (feature) axis.
+
+    This is the serving-side activation quantizer: each token's activation
+    is scaled by its own amax, so the result for a token is independent of
+    whatever else shares the batch.  (A per-tensor scale would couple
+    continuous-batching decode lanes: admitting a new request would change
+    every other in-flight sequence's quantization grid.)  ``bits`` is a
+    scalar; <= 0.5 prunes, >= FULL_BITS passes through, matching
+    :func:`fake_quant`.
+    """
+    x = jnp.asarray(x)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    b = jnp.asarray(bits, jnp.float32)
+    lv = _levels(b)
+    scale = jnp.where(amax > 0, amax / lv, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -lv, lv) * scale
+    out = jnp.where(b <= 0.5, 0.0, jnp.where(b >= FULL_BITS, xf, q))
+    return out.astype(dtype)
+
+
 @jax.custom_vjp
 def ste_fake_quant(x: jnp.ndarray, bits: jnp.ndarray, axis: int):
     """Fake quant with a straight-through gradient estimator (QAT forward)."""

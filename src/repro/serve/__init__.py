@@ -10,9 +10,12 @@ Layering (each module is importable on its own):
 * :mod:`repro.serve.engine` -- :class:`ServeEngine`: quantized weight-store
   deployment (fake-quant or bit-packed) + the two execution models,
   ``generate`` (single dense batch, the oracle) and ``run`` (continuous
-  batching over the paged pool).
+  batching over the paged pool).  Attention runs on the Pallas kernels by
+  default (``attn_impl="pallas"``, kernels/attention.py; ``"ref"`` is the
+  jnp-oracle escape hatch), KV pages optionally int8 (``kv_bits=8``), and
+  a policy's activation QBNs follow the model into prefill/decode.
 
-See docs/serving.md for the architecture walkthrough.
+See docs/serving.md and docs/attention.md for the architecture walkthrough.
 """
 from repro.serve.engine import ServeEngine, ServeStats
 from repro.serve.paged_kv import PageAllocator, PagesExhausted, pages_needed

@@ -29,12 +29,19 @@ Both stores serve through *both* execution models unchanged -- the store is
 a property of the parameters, not of the cache layout (invariant guarded by
 tests/test_paged_kv.py parity tests).
 
-Activations are NOT yet quantized in the serve path (the policy's per-block
-activation QBNs are a ROADMAP open item; quant.apply.quantize_activation
-exists but the engine does not thread it into prefill/decode).  This is
-the jnp-everywhere path: it runs on a laptop CPU and under a production mesh
-unchanged (the dry-run lowers the same prefill/decode steps against the
-256/512-chip meshes).
+Attention runs on the Pallas kernels by default (``attn_impl="pallas"``:
+kernels/attention.py -- fused flash prefill + block-table paged decode, in
+interpret mode off-TPU); ``attn_impl="ref"`` is the escape hatch back to
+the jnp oracle path, which is also what the train/dry-run paths use.
+
+Activation quantization: a policy's per-block activation QBNs are threaded
+into prefill and decode (``serve_act_bits``, on by default), closing the
+search->serve gap for activations the same way the weight stores close it
+for weights.  ``kv_bits=8`` extends the int8 KV cache to the paged pool
+(scale page per KV page; the Pallas decode kernel dequantizes in VMEM).
+Everything still runs on a laptop CPU and under a production mesh unchanged
+(the dry-run lowers the same prefill/decode steps against the 256/512-chip
+meshes).
 """
 from __future__ import annotations
 
@@ -74,27 +81,56 @@ class ServeStats:
 class ServeEngine:
     def __init__(self, model: LM, params, policy: Optional[QuantPolicy] = None,
                  graph=None, max_len: int = 512, cache_dtype=jnp.float32,
-                 weight_store: str = "fake"):
+                 weight_store: str = "fake", attn_impl: str = "pallas",
+                 kv_bits: Optional[int] = None, serve_act_bits: bool = True):
+        """attn_impl: attention backend for every engine model call
+        (``"pallas"`` default / ``"ref"`` oracle escape hatch).  kv_bits=8
+        stores the KV cache -- dense and paged alike -- as int8 with
+        per-(position, head) scales.  serve_act_bits: thread the policy's
+        per-block activation QBNs into prefill/decode (no-op without a
+        policy)."""
         if weight_store not in ("fake", "packed"):
             raise ValueError(f"unknown weight_store {weight_store!r}")
         if weight_store == "packed" and policy is None:
             raise ValueError("weight_store='packed' requires a policy "
                              "(without one the engine would silently serve "
                              "dense full-precision weights)")
+        from repro.models.layers import ATTN_IMPLS
+        if attn_impl not in ATTN_IMPLS:
+            raise ValueError(f"unknown attn_impl {attn_impl!r}; "
+                             f"expected one of {ATTN_IMPLS}")
+        if kv_bits not in (None, 8):
+            raise ValueError(f"unsupported kv_bits {kv_bits!r}: only 8 "
+                             "(int8 + per-(position, head) scales) is "
+                             "implemented; None serves full-precision KV")
         self.model = model
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.weight_store = weight_store
+        self.attn_impl = attn_impl
+        self.kv_bits = kv_bits
+        self.act_bits = None
         if policy is not None:
             graph = graph or model.graph(seq_len=1, batch=1)
             if weight_store == "packed":
                 params = apply_policy_packed(params, graph, policy)
             else:
                 params = apply_policy_to_params(params, graph, policy)
+            if serve_act_bits:
+                # the same policy -> per-block collapse the evaluator uses,
+                # so serving quantizes activations exactly like search-time
+                # evaluation (block scalar = input projection site's QBN)
+                from repro.quant.linear_quant import FULL_BITS
+                self.act_bits = model.block_act_bits(
+                    graph, [policy.act_bits.get(l.name, float(FULL_BITS))
+                            for l in graph.layers])
         self.params = params
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
-        self._decode_paged = jax.jit(model.decode_step_paged)
+        self._prefill = jax.jit(model.prefill,
+                                static_argnames=("attn_impl",))
+        self._decode = jax.jit(model.decode_step,
+                               static_argnames=("attn_impl",))
+        self._decode_paged = jax.jit(model.decode_step_paged,
+                                     static_argnames=("attn_impl",))
 
     def weight_hbm_bytes(self) -> Dict[str, int]:
         """Stored weight bytes by leaf kind.
@@ -124,11 +160,14 @@ class ServeEngine:
         """tokens: (B, S_prompt) int32.  Greedy (T=0) or sampled decode."""
         B, S = tokens.shape
         assert S + n_new <= self.max_len
-        cache = self.model.init_cache(B, self.max_len, dtype=self.cache_dtype)
+        cache = self.model.init_cache(B, self.max_len, dtype=self.cache_dtype,
+                                      kv_bits=self.kv_bits)
         stats = ServeStats(n_requests=B)
         t0 = time.time()
         logits, cache = self._prefill(self.params,
-                                      {"tokens": jnp.asarray(tokens)}, cache)
+                                      {"tokens": jnp.asarray(tokens)}, cache,
+                                      self.act_bits,
+                                      attn_impl=self.attn_impl)
         logits.block_until_ready()
         stats.prefill_s = time.time() - t0
 
@@ -146,7 +185,8 @@ class ServeEngine:
             cur = cur.astype(jnp.int32)[:, None]
             out.append(np.asarray(cur))
             logits, cache = self._decode(self.params, cur, cache,
-                                         jnp.int32(S + i))
+                                         jnp.int32(S + i), self.act_bits,
+                                         attn_impl=self.attn_impl)
         jax.block_until_ready(logits)
         stats.decode_s = time.time() - t0
         stats.tokens_out = B * n_new
@@ -191,7 +231,8 @@ class ServeEngine:
         if num_pages is None:
             num_pages = max_slots * blocks_per_seq + 1      # +1: trash page
         cache = self.model.init_paged_cache(max_slots, num_pages, page_size,
-                                            dtype=self.cache_dtype)
+                                            dtype=self.cache_dtype,
+                                            kv_bits=self.kv_bits)
         kinds = self.model.cfg.cache_kinds()
         sched = Scheduler(max_slots, page_size,
                           blocks_per_seq, paged_kv.PageAllocator(num_pages))
@@ -235,7 +276,8 @@ class ServeEngine:
             b = sched.batch()
             logits, cache = self._decode_paged(
                 self.params, jnp.asarray(b["tokens"]), cache,
-                jnp.asarray(b["block_tables"]), jnp.asarray(b["pos"]))
+                jnp.asarray(b["block_tables"]), jnp.asarray(b["pos"]),
+                self.act_bits, attn_impl=self.attn_impl)
             rows = np.asarray(logits[:, -1])
             for i in running:
                 req = sched.slot(i).req
@@ -269,9 +311,11 @@ class ServeEngine:
         from the in-flight k/v, not read back), so rounding the prompt up to
         a page multiple bounds jit variants without changing numerics."""
         L = paged_kv.pages_needed(req.prompt_len, page_size) * page_size
-        dense = self.model.init_cache(1, L, dtype=self.cache_dtype)
+        dense = self.model.init_cache(1, L, dtype=self.cache_dtype,
+                                      kv_bits=self.kv_bits)
         logits, dense = self._prefill(
-            self.params, {"tokens": jnp.asarray(req.tokens[None])}, dense)
+            self.params, {"tokens": jnp.asarray(req.tokens[None])}, dense,
+            self.act_bits, attn_impl=self.attn_impl)
         return logits, dense
 
     def _next_token(self, req: Request, rngs: Dict[int, jax.Array],

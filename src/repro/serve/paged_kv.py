@@ -163,8 +163,11 @@ def write_prefill(paged_cache, dense_cache, kinds: Sequence[str], slot: int,
     prompt and be scrubbed).  The scatter is driven by the dense cache's own
     ``pos`` plane, so ring-buffer (sliding-window) prefill caches -- which
     hold only the last ``window`` positions -- copy exactly the positions
-    they kept.  ``"memory"`` and ``"state"`` entries copy whole into batch
-    slot ``slot``.
+    they kept.  Every per-slot plane of a ``"paged"`` entry copies the same
+    way -- k/v values, ``pos``, and (int8 pools) the ``k_s``/``v_s`` scale
+    pages -- so a ``kv_bits=8`` prefill lands in the pool with the exact
+    scales the dense quantizer chose.  ``"memory"`` and ``"state"`` entries
+    copy whole into batch slot ``slot``.
     """
     blocks_np = np.asarray(list(blocks), np.int32)
     out = []
@@ -176,13 +179,10 @@ def write_prefill(paged_cache, dense_cache, kinds: Sequence[str], slot: int,
             phys = jnp.asarray(blocks_np[p // page_size])
             pslot = jnp.asarray(p % page_size)
             j = jnp.asarray(j)
-            entry = dict(pool)
-            entry["k"] = pool["k"].at[:, phys, pslot].set(
-                pre["k"][:, 0, j].astype(pool["k"].dtype))
-            entry["v"] = pool["v"].at[:, phys, pslot].set(
-                pre["v"][:, 0, j].astype(pool["v"].dtype))
-            entry["pos"] = pool["pos"].at[:, phys, pslot].set(
-                pre["pos"][:, 0, j])
+            # pool planes are (R, P, ps, ...) and dense planes (R, 1, S, ...)
+            # with matching trailing dims, so one scatter form covers them all
+            entry = {key: pool[key].at[:, phys, pslot].set(
+                pre[key][:, 0, j].astype(pool[key].dtype)) for key in pool}
             out.append(entry)
         elif kind == "memory":
             out.append({key: pool[key].at[:, slot].set(
