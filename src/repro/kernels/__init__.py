@@ -7,9 +7,12 @@ packed_mixed_matmul -- bucketed dispatch over a PackedWeight (a searched
                   mixed-QBN policy's serving contraction)
 binary_matmul  -- bit-plane (binarized) matmul, alpha-weighted sign planes
 fake_quant     -- per-channel quantize-dequantize (QAT forward)
-flash_attention / paged_decode_attention -- the attention subsystem
-                  (attention.py, docs/attention.md): tiled flash prefill and
-                  block-table paged decode (int8 pages dequantize in VMEM)
+flash_attention / paged_prefill_attention -- the attention subsystem
+                  (attention.py, docs/attention.md): tiled flash forward,
+                  and block-table paged attention for q-tiles of k tokens
+                  per sequence -- chunked prefill and (k = 1, via the
+                  paged_decode_attention wrapper) decode are one kernel
+                  (int8 pages dequantize in VMEM)
 
 pack.py holds the bit-packing format + the PackedWeight pytree container
 (see docs/packed_layout.md); ops.py exposes the jit'd public wrappers
@@ -18,7 +21,8 @@ kernel is allclose-tested against (for attention the oracle is
 models/layers.attention_ref).  Kernels validate under interpret=True on
 CPU; TPU is the compile target.
 """
-from repro.kernels.attention import flash_attention, paged_decode_attention
+from repro.kernels.attention import (flash_attention, paged_decode_attention,
+                                     paged_prefill_attention)
 from repro.kernels.ops import (binary_matmul, fake_quant_channels,
                                packed_matmul, packed_mixed_matmul,
                                quant_matmul)
@@ -26,4 +30,5 @@ from repro.kernels.pack import PackedWeight, pack_sub8, unpack_sub8
 
 __all__ = ["binary_matmul", "fake_quant_channels", "flash_attention",
            "packed_matmul", "packed_mixed_matmul", "paged_decode_attention",
-           "quant_matmul", "PackedWeight", "pack_sub8", "unpack_sub8"]
+           "paged_prefill_attention", "quant_matmul", "PackedWeight",
+           "pack_sub8", "unpack_sub8"]

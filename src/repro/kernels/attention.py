@@ -13,17 +13,22 @@ bit-accuracy oracle both kernels are property-tested against):
   loading each K/V tile once per KV head instead of once per query head.
   Causal, sliding-window and softcap masking run on the score tile in VMEM.
 
-* :func:`paged_decode_attention` -- block-table-aware decode over the paged
-  KV pool (serve/paged_kv.py layout).  The block table rides in as a
-  scalar-prefetch operand, so the BlockSpec index_map resolves
+* :func:`paged_prefill_attention` -- block-table-aware attention over the
+  paged KV pool (serve/paged_kv.py layout) for q tiles of ``k`` tokens per
+  sequence: the chunked-prefill workhorse, and (at ``k == 1``, via the
+  :func:`paged_decode_attention` wrapper) the decode step.  The block table
+  rides in as a scalar-prefetch operand, so the BlockSpec index_map resolves
   ``bt[seq, first[seq] + j]`` *before* each grid step and the pipeline DMAs
   exactly that physical page HBM->VMEM -- there is no dense gather and no
-  (B, nb*page_size) intermediate.  For sliding-window blocks, ``first`` (the
-  oldest logical block still inside the window, precomputed per sequence)
-  re-bases the walk: out-of-window pages are never fetched.  Walk steps past
-  a sequence's last block clip onto its final block id and mask the whole
-  tile (Pallas skips the re-fetch when consecutive steps map to the same
-  block, so the clip costs no extra HBM traffic).
+  (B, nb*page_size) intermediate.  Causal masking runs against each q row's
+  own position, so a chunk's rows attend earlier chunks' pages plus their
+  own chunk's already-written slots (chunk offsets need no extra state).
+  For sliding-window blocks, ``first`` (the oldest logical block still
+  inside the window of the tile's lowest real position, precomputed per
+  sequence) re-bases the walk: out-of-window pages are never fetched.  Walk
+  steps past a sequence's last block clip onto its final block id and mask
+  the whole tile (Pallas skips the re-fetch when consecutive steps map to
+  the same block, so the clip costs no extra HBM traffic).
 
 int8 KV pages (``kv_bits=8`` pool): when the pool stores int8, the kernel
 streams the packed page plus its per-(slot, head) scale page into VMEM and
@@ -197,8 +202,8 @@ def flash_attention(q, k, v, *, q_pos, kv_pos, causal=True, window=None,
     return out[:, :Sq, :, :D]
 
 
-# ------------------------------------------------------- paged decode
-def _paged_kernel(bt_ref, qp_ref, first_ref, q_ref, k_ref, v_ref, pos_ref,
+# --------------------------------------------- paged prefill / decode
+def _paged_kernel(bt_ref, first_ref, q_ref, qp_ref, k_ref, v_ref, pos_ref,
                   *rest, nb, window, cap, scale, G, quant):
     if quant:
         ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
@@ -213,18 +218,18 @@ def _paged_kernel(bt_ref, qp_ref, first_ref, q_ref, k_ref, v_ref, pos_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    D = q_ref.shape[3]
-    qt = q_ref[0, 0].astype(jnp.float32) * scale          # (G, D)
+    bq, D = q_ref.shape[1], q_ref.shape[3]
+    qt = (q_ref[0].astype(jnp.float32) * scale).reshape(bq * G, D)
     kt = k_ref[0, :, 0, :].astype(jnp.float32)            # (ps, D)
     vt = v_ref[0, :, 0, :].astype(jnp.float32)
     if quant:                  # int8 pages: dequantize in VMEM, not in HBM
         kt = kt * ks_ref[0, :, 0][:, None]
         vt = vt * vs_ref[0, :, 0][:, None]
     s = jax.lax.dot_general(qt, kt, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # (G, ps)
+                            preferred_element_type=jnp.float32)  # (bq*G, ps)
     if cap is not None:
         s = cap * jnp.tanh(s / cap)
-    qp = jnp.full((s.shape[0], 1), qp_ref[b], jnp.int32)
+    qp = jnp.repeat(qp_ref[0, :], G)[:, None]
     s = _mask_tile(s, qp, pos_ref[0][None, :], causal=True, window=window)
     # walk steps past the last logical block were clipped onto block nb-1 by
     # the index_map: mask the duplicate tile entirely
@@ -233,32 +238,43 @@ def _paged_kernel(bt_ref, qp_ref, first_ref, q_ref, k_ref, v_ref, pos_ref,
 
     @pl.when(j == pl.num_programs(2) - 1)
     def _done():
-        o_ref[0, 0] = _finalize(acc_ref, l_ref, (G, D), o_ref.dtype)
+        o_ref[0] = _finalize(acc_ref, l_ref, (bq, G, D), o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "attn_cap",
                                              "interpret"))
-def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
-                           q_pos, window=None, attn_cap=None,
-                           k_scale_pages=None, v_scale_pages=None,
-                           interpret=INTERPRET):
-    """Decode attention that walks the block table, page by page.
+def paged_prefill_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
+                            q_pos, window=None, attn_cap=None,
+                            k_scale_pages=None, v_scale_pages=None,
+                            interpret=INTERPRET):
+    """Causal attention over the paged KV pool for q-tiles of k tokens.
 
-    q: (B, 1, Hq, D); ``*_pages``: (P, page_size, Hkv, D) physical pool
+    The block-table page walk generalized from single-token decode to the
+    chunked-prefill q tile: each sequence contributes ``k`` query rows (a
+    prompt chunk, a lone decode token, or sentinel padding) that all read KV
+    through the same scalar-prefetched block-table row.
+
+    q: (B, k, Hq, D); ``*_pages``: (P, page_size, Hkv, D) physical pool
     (``pos_pages`` (P, page_size) int32); block_tables: (B, nb) int32;
-    q_pos: (B, 1) (or (B,)) int32 per-sequence positions.  int8 pools pass
-    ``k_scale_pages`` / ``v_scale_pages`` (P, page_size, Hkv) f32 and the
-    kernel dequantizes in VMEM.  Returns (B, 1, Hq, D) in q.dtype.
+    q_pos: (B, k) int32 per-row token positions, **left-aligned**: real
+    tokens occupy columns ``0..c-1`` in ascending position order and padded
+    columns carry ``POS_SENTINEL``.  int8 pools pass ``k_scale_pages`` /
+    ``v_scale_pages`` (P, page_size, Hkv) f32 and the kernel dequantizes in
+    VMEM.  Returns (B, k, Hq, D) in q.dtype.
 
     Grid (B, Hkv, nb): step ``j`` of sequence ``b`` DMAs physical page
     ``bt[b, min(first[b]+j, nb-1)]`` (index_map over the scalar-prefetched
-    table).  ``first`` skips the logical blocks wholly below the sliding
-    window, so out-of-window pages never leave HBM; not-yet-grown tail
-    blocks point at the trash page whose slots are all-sentinel.  Idle lanes
-    (q_pos == sentinel) produce zeros (every slot masks); the scheduler
-    ignores their rows either way.
+    table).  ``first`` -- computed from the row's *lowest* real position
+    (column 0, thanks to left-alignment) -- skips the logical blocks wholly
+    below the sliding window, so out-of-window pages never leave HBM;
+    not-yet-grown tail blocks point at the trash page whose slots are
+    all-sentinel.  Causal masking against each row's own position handles
+    chunk offsets: a chunk token attends earlier chunks' pages plus its own
+    chunk's already-written slots, never its future.  Fully padded rows
+    (q_pos all sentinel under a window; all-trash tables otherwise) produce
+    zeros or garbage the scheduler ignores.
     """
-    B, _, Hq, D = q.shape
+    B, k, Hq, D = q.shape
     P, ps, Hkv, _ = k_pages.shape
     nb = block_tables.shape[1]
     G = Hq // Hkv
@@ -266,16 +282,20 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
     assert quant == (k_scale_pages is not None), \
         "int8 pools require scale pages (and f32/bf16 pools must not pass them)"
     scale = 1.0 / math.sqrt(D)
-    qp = q_pos.reshape(B).astype(jnp.int32)
+    qp = q_pos.reshape(B, k).astype(jnp.int32)
     if window is not None:
-        # oldest logical block with any position > qp - window still in it
-        first = jnp.clip((qp - (window - 1)) // ps, 0, nb - 1)
+        # oldest logical block with any position > min_real_qp - window in
+        # it; left-alignment makes column 0 the row's lowest real position
+        # (sentinel rows clip to nb-1 and mask everything, like decode)
+        first = jnp.clip((qp[:, 0] - (window - 1)) // ps, 0, nb - 1)
     else:
         first = jnp.zeros((B,), jnp.int32)
 
     q_, k_, v_ = q, k_pages, v_pages
-    pos_ = pos_pages
+    qp_, pos_ = qp, pos_pages
     if not interpret:            # TPU alignment: slot sublanes + head lanes
+        q_ = _pad_axis(q_, 8, 1)
+        qp_ = _pad_axis(qp_, 8, 1, value=POS_SENTINEL)
         k_ = _pad_axis(k_, 8, 1)
         v_ = _pad_axis(v_, 8, 1)
         pos_ = _pad_axis(pos_, 8, 1, value=POS_SENTINEL)
@@ -283,28 +303,29 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
         if quant:
             k_scale_pages = _pad_axis(k_scale_pages, 8, 1)
             v_scale_pages = _pad_axis(v_scale_pages, 8, 1)
-    psp, Dp = k_.shape[1], k_.shape[3]
+    kp, psp, Dp = q_.shape[1], k_.shape[1], k_.shape[3]
 
-    def page_map(b, h, j, bt, qpr, fr):
+    def page_map(b, h, j, bt, fr):
         blk = jnp.minimum(fr[b] + j, nb - 1)
         return (bt[b, blk], 0, h, 0)
 
-    def pos_map(b, h, j, bt, qpr, fr):
+    def pos_map(b, h, j, bt, fr):
         blk = jnp.minimum(fr[b] + j, nb - 1)
         return (bt[b, blk], 0)
 
-    def q_map(b, h, j, bt, qpr, fr):
+    def q_map(b, h, j, bt, fr):
         return (b, 0, h, 0)
 
     in_specs = [
-        pl.BlockSpec((1, 1, G, Dp), q_map),
+        pl.BlockSpec((1, kp, G, Dp), q_map),
+        pl.BlockSpec((1, kp), lambda b, h, j, bt, fr: (b, 0)),
         pl.BlockSpec((1, psp, 1, Dp), page_map),
         pl.BlockSpec((1, psp, 1, Dp), page_map),
         pl.BlockSpec((1, psp), pos_map),
     ]
-    operands = [q_, k_, v_, pos_]
+    operands = [q_, qp_, k_, v_, pos_]
     if quant:
-        def scale_map(b, h, j, bt, qpr, fr):     # (P, ps, Hkv): 3-d blocks
+        def scale_map(b, h, j, bt, fr):          # (P, ps, Hkv): 3-d blocks
             blk = jnp.minimum(fr[b] + j, nb - 1)
             return (bt[b, blk], 0, h)
 
@@ -313,21 +334,38 @@ def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
         operands += [k_scale_pages, v_scale_pages]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=2,
         grid=(B, Hkv, nb),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, 1, G, Dp), q_map),
+        out_specs=pl.BlockSpec((1, kp, G, Dp), q_map),
         scratch_shapes=[
-            pltpu.VMEM((G, Dp), jnp.float32),
-            pltpu.VMEM((G, _LANES), jnp.float32),
-            pltpu.VMEM((G, _LANES), jnp.float32),
+            pltpu.VMEM((kp * G, Dp), jnp.float32),
+            pltpu.VMEM((kp * G, _LANES), jnp.float32),
+            pltpu.VMEM((kp * G, _LANES), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         functools.partial(_paged_kernel, nb=nb, window=window, cap=attn_cap,
                           scale=scale, G=G, quant=quant),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, Dp), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, kp, Hq, Dp), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), qp, first, *operands)
-    return out[..., :D]
+    )(block_tables.astype(jnp.int32), first, *operands)
+    return out[:, :k, :, :D]
+
+
+def paged_decode_attention(q, k_pages, v_pages, pos_pages, block_tables, *,
+                           q_pos, window=None, attn_cap=None,
+                           k_scale_pages=None, v_scale_pages=None,
+                           interpret=INTERPRET):
+    """Single-token decode over the paged pool: the ``k == 1`` q tile of
+    :func:`paged_prefill_attention` (kept as the decode-path entry point).
+
+    q: (B, 1, Hq, D); q_pos: (B, 1) or (B,) int32.  Returns (B, 1, Hq, D).
+    """
+    B = q.shape[0]
+    return paged_prefill_attention(
+        q, k_pages, v_pages, pos_pages, block_tables,
+        q_pos=q_pos.reshape(B, 1), window=window, attn_cap=attn_cap,
+        k_scale_pages=k_scale_pages, v_scale_pages=v_scale_pages,
+        interpret=interpret)

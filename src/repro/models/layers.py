@@ -235,15 +235,18 @@ def paged_gather(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
 def paged_attention(q, k_pages, v_pages, pos_pages, block_tables, *, q_pos,
                     causal=True, window=None, attn_cap=None,
                     k_scale_pages=None, v_scale_pages=None, impl=None):
-    """Decode attention over a paged KV pool: dispatcher.
+    """Attention over a paged KV pool: dispatcher (decode *and* chunks).
 
-    q: (B, 1, Hq, D); ``*_pages``: (P, page_size, Hkv, D) (``pos_pages``
-    (P, page_size) int32); block_tables: (B, nb).  int8 pools carry
-    per-(slot, head) ``*_scale_pages`` (P, page_size, Hkv) f32.
+    q: (B, Sq, Hq, D) -- ``Sq == 1`` is the decode step, ``Sq > 1`` a
+    prompt chunk whose K/V were already scattered into the pool this step;
+    ``*_pages``: (P, page_size, Hkv, D) (``pos_pages`` (P, page_size)
+    int32); block_tables: (B, nb); q_pos: (B, Sq) int32, real rows
+    left-aligned and sentinel-padded.  int8 pools carry per-(slot, head)
+    ``*_scale_pages`` (P, page_size, Hkv) f32.
 
     ``impl="ref"`` (default) gathers each sequence's pages into logical
     order and runs the standard masked flash attention; ``"pallas"``
-    (kernels/attention.paged_decode_attention) walks the block table
+    (kernels/attention.paged_prefill_attention) walks the block table
     in-kernel, streaming pages into VMEM with no dense gather.  Slots whose
     position is the sentinel (unwritten, scrubbed, or trash) mask to -inf
     exactly like the dense cache's convention on both paths, so the result
@@ -251,8 +254,8 @@ def paged_attention(q, k_pages, v_pages, pos_pages, block_tables, *, q_pos,
     """
     impl = _check_impl(impl)
     if impl == "pallas" and causal:
-        from repro.kernels.attention import paged_decode_attention
-        return paged_decode_attention(
+        from repro.kernels.attention import paged_prefill_attention
+        return paged_prefill_attention(
             q, k_pages, v_pages, pos_pages, block_tables, q_pos=q_pos,
             window=window, attn_cap=attn_cap, k_scale_pages=k_scale_pages,
             v_scale_pages=v_scale_pages)

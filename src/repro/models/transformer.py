@@ -7,7 +7,10 @@ pattern repeats (stacked parameters, leading axis n_repeat), so HLO size is
 O(pattern period), not O(depth).
 
 Entry points: ``apply`` (full-sequence train forward), ``prefill`` (forward +
-cache fill, last-token logits), ``decode_step`` (single token with cache).
+cache fill, last-token logits), ``decode_step`` (single token with cache),
+``decode_step_paged`` (paged single token), and ``model_step`` -- the
+serving engine's unified token-budget step, where every row is a prompt
+chunk or a decode token written straight into block-table pages.
 Kernel-wise quantization hooks: weights are fake-quantized outside the forward
 via ``quant.apply_policy_to_params``; activations via ``act_bits``, one scalar
 per (repeat, pattern-position) block.
@@ -33,6 +36,11 @@ from repro.quant.policy import LayerInfo, QuantizableGraph
 from repro.sharding.ctx import constrain
 
 POS_SENTINEL = np.iinfo(np.int32).max
+# physical page 0 of every paged pool is the never-allocated trash page
+# (serve/paged_kv.py re-exports this and owns the lifecycle invariants;
+# defined here, like POS_SENTINEL, because the paged write path below must
+# route sentinel lanes to it without importing the serve layer)
+TRASH_PAGE = 0
 
 
 def _lin_init(key, fan_in, shape, dtype):
@@ -188,30 +196,39 @@ class LM:
             k = rope(k, q_pos, cfg.rope_theta)
             kv_pos = q_pos
             if cache is not None:
-                if block_tables is not None:        # paged decode write+attend
+                if block_tables is not None:   # paged write+attend (S >= 1:
+                    # one decode token or a k-token prompt chunk per row)
                     ps = cache["k"].shape[-3]
-                    # idle lanes carry write_pos == POS_SENTINEL: clip their
-                    # (huge) block index into the all-trash table row, and
-                    # the sentinel pos value keeps the written slot masked
-                    blk = (write_pos // ps).astype(jnp.int32)
-                    phys = jnp.take_along_axis(block_tables, blk[:, None],
-                                               axis=1, mode="clip")[:, 0]
-                    pslot = write_pos % ps
+                    nb = block_tables.shape[1]
+                    wp = write_pos if write_pos.ndim == 2 \
+                        else write_pos[:, None]            # (B, S)
+                    # sentinel lanes (idle decode slots, chunk padding)
+                    # route to the trash page *explicitly*: an active row's
+                    # clipped block index would land in one of its own real
+                    # pages and corrupt a live KV slot
+                    blk = jnp.minimum((wp // ps).astype(jnp.int32), nb - 1)
+                    phys = jnp.take_along_axis(block_tables, blk, axis=1)
+                    phys = jnp.where(wp == POS_SENTINEL, TRASH_PAGE, phys)
+                    fp = phys.reshape(-1)                  # flat (B*S,)
+                    fs = (wp % ps).reshape(-1)
                     new_cache = dict(cache)
                     if cache["k"].dtype == jnp.int8:   # quantized page write
                         for key, val in (("k", k), ("v", v)):
                             qv, sv = _kv_quant(val)
-                            new_cache[key] = cache[key].at[phys, pslot].set(
-                                qv[:, 0])
+                            new_cache[key] = cache[key].at[fp, fs].set(
+                                qv.reshape((-1,) + qv.shape[2:]))
                             new_cache[key + "_s"] = \
-                                cache[key + "_s"].at[phys, pslot].set(sv[:, 0])
+                                cache[key + "_s"].at[fp, fs].set(
+                                    sv.reshape((-1,) + sv.shape[2:]))
                     else:
-                        new_cache["k"] = cache["k"].at[phys, pslot].set(
-                            k[:, 0].astype(cache["k"].dtype))
-                        new_cache["v"] = cache["v"].at[phys, pslot].set(
-                            v[:, 0].astype(cache["v"].dtype))
-                    new_cache["pos"] = cache["pos"].at[phys, pslot].set(
-                        write_pos.astype(jnp.int32))
+                        new_cache["k"] = cache["k"].at[fp, fs].set(
+                            k.reshape((-1,) + k.shape[2:])
+                            .astype(cache["k"].dtype))
+                        new_cache["v"] = cache["v"].at[fp, fs].set(
+                            v.reshape((-1,) + v.shape[2:])
+                            .astype(cache["v"].dtype))
+                    new_cache["pos"] = cache["pos"].at[fp, fs].set(
+                        wp.reshape(-1).astype(jnp.int32))
                     out = paged_attention(
                         q, new_cache["k"], new_cache["v"], new_cache["pos"],
                         block_tables, q_pos=q_pos, causal=causal,
@@ -242,6 +259,17 @@ class LM:
                         vw = jnp.roll(v[:, -W:], sh, axis=1)
                         pw = jnp.roll(q_pos[:, -W:], sh, axis=1)
                     new_cache = _kv_write(cache, kw, vw, pw, 0)
+                    if cache["k"].dtype == jnp.int8:
+                        # serve-consistent numerics: prompt tokens attend
+                        # the int8 round trip of the in-flight K/V -- the
+                        # exact values decode reads back from the cache and
+                        # the chunked paged path reads from int8 pages
+                        # (per-position scales, so the round trip covers
+                        # even ring-evicted positions identically)
+                        kq, ks = _kv_quant(k)
+                        k = kq.astype(jnp.float32) * ks[..., None]
+                        vq, vs = _kv_quant(v)
+                        v = vq.astype(jnp.float32) * vs[..., None]
         chunk = k.shape[1] if S == 1 else 1024
         out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
                         window=window, attn_cap=cfg.attn_softcap, chunk=chunk,
@@ -611,6 +639,67 @@ class LM:
         body, xs = self._with_act_bits(repeat_body, params, cache, act_bits)
         x, new_cache = jax.lax.scan(body, x, xs)
         return self.logits_of(params, x), new_cache
+
+    # ------------------------------------------- unified token-budget step
+    def model_step(self, params, tokens, positions, slot_map, cache,
+                   block_tables, logit_cols, act_bits=None, attn_impl=None):
+        """One token-budget step: prompt chunks and decode tokens together.
+
+        The chunked-prefill serving loop's single entry point -- prefill and
+        decode are the same call.  Row ``r`` of the fixed-shape ``(R, k)``
+        batch carries slot ``slot_map[r]``'s contribution this step: a
+        prompt chunk of up to ``k`` tokens, one decode token, or nothing.
+        Real tokens are **left-aligned in ascending position order**; padded
+        columns carry ``positions == POS_SENTINEL`` (their K/V writes route
+        to the trash page and their query rows mask or are ignored).  K/V is
+        written *straight into block-table pages* -- there is no dense
+        intermediate cache and no per-prompt-length shape anywhere, so jit
+        variants are bounded by (R, k, pool shape) alone.
+
+        tokens / positions: (R, k) int32; slot_map: (R,) int32 row ->
+        scheduler slot (selects each row's block-table row); block_tables:
+        (n_slots, nb) int32; logit_cols: (R,) int32 column of each row's
+        last real token -- its hidden state feeds the returned logits
+        (mirror of ``prefill``'s last-token slice; rows without real tokens
+        produce garbage the scheduler ignores).  ``cache`` is an
+        ``init_paged_cache`` tuple whose kinds must all be ``"paged"``:
+        recurrent ("state") and cross-attention ("memory") blocks cannot
+        chunk and stay on the monolithic prefill path.  act_bits /
+        attn_impl as in :meth:`prefill`.  Returns (logits (R, 1, V),
+        new_cache).
+        """
+        cfg = self.cfg
+        kinds = cfg.cache_kinds()
+        if any(kd != "paged" for kd in kinds):
+            raise ValueError(
+                "model_step requires a pure paged-cache pattern (attn / "
+                f"local_attn only); got cache kinds {kinds} -- serve hybrid "
+                "architectures through the monolithic prefill path")
+        x = self._embed_tokens(params, tokens)
+        x = constrain(x, "hidden")
+        q_pos = positions.astype(jnp.int32)
+        bt_rows = jnp.take(block_tables, slot_map, axis=0)     # (R, nb)
+
+        def repeat_body(x, xs):
+            blocks_slice, cache_slice, ab_slice = xs
+            new_slices = []
+            for p_idx, bdef in enumerate(cfg.pattern):
+                ab = None if ab_slice is None else ab_slice[p_idx]
+                x, nc, _ = self._apply_block(
+                    blocks_slice[p_idx], bdef, x, q_pos=q_pos, mode="decode",
+                    cache=cache_slice[p_idx], write_pos=q_pos,
+                    block_tables=bt_rows, act_bits=ab, attn_impl=attn_impl)
+                x = constrain(x, "hidden")
+                new_slices.append(nc)
+            return x, tuple(new_slices)
+
+        body, xs = self._with_act_bits(repeat_body, params, cache, act_bits)
+        x, new_cache = jax.lax.scan(body, x, xs)
+        R, _, d = x.shape
+        idx = jnp.broadcast_to(logit_cols.astype(jnp.int32)[:, None, None],
+                               (R, 1, d))
+        return self.logits_of(params, jnp.take_along_axis(x, idx, axis=1)), \
+            new_cache
 
     # -------------------------------------------------- activation QBNs
     def block_act_bits(self, graph: QuantizableGraph, values,

@@ -5,12 +5,16 @@ Layering (each module is importable on its own):
 * :mod:`repro.serve.paged_kv` -- page pool mechanics: free-list allocator,
   per-sequence block tables, scrub-on-alloc and the prefill scatter.  Owns
   the trash-page and position-sentinel invariants.
-* :mod:`repro.serve.scheduler` -- continuous-batching policy: admission
-  queue, slot states, page lifecycle.  Pure host-side bookkeeping.
+* :mod:`repro.serve.scheduler` -- continuous-batching policy: chunked
+  (first-chunk) and monolithic admission, the token-budget ``plan_step``,
+  requeue-on-preemption, out-of-window page reclamation, page lifecycle.
+  Pure host-side bookkeeping.
 * :mod:`repro.serve.engine` -- :class:`ServeEngine`: quantized weight-store
   deployment (fake-quant or bit-packed) + the two execution models,
-  ``generate`` (single dense batch, the oracle) and ``run`` (continuous
-  batching over the paged pool).  Attention runs on the Pallas kernels by
+  ``generate`` (single dense batch, the oracle) and ``run`` (the unified
+  token-budget step loop over the paged pool; chunked prefill by default,
+  monolithic fallback for hybrid archs).  Attention runs on the Pallas
+  kernels by
   default (``attn_impl="pallas"``, kernels/attention.py; ``"ref"`` is the
   jnp-oracle escape hatch), KV pages optionally int8 (``kv_bits=8``), and
   a policy's activation QBNs follow the model into prefill/decode.

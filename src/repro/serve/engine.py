@@ -6,12 +6,18 @@ Two execution models share one weight store and one model:
   dense ``[B, max_len]`` KV cache, every sequence prefilled together, the
   whole batch decoded in lockstep.  It is the *oracle*: the paged path must
   reproduce its token streams per request.
-* :meth:`ServeEngine.run` -- continuous batching over a paged KV cache:
-  requests of mixed lengths are admitted into decode-batch slots as pages
-  and slots free up (serve/scheduler.py), prefill runs per admitted request
-  and scatters into the page pool (serve/paged_kv.py), and a single jit'd
-  ``decode_step_paged`` advances all in-flight sequences one token per step
-  through their block tables.
+* :meth:`ServeEngine.run` -- continuous batching over a paged KV cache
+  with a unified token-budget step loop (``prefill="chunked"``, default):
+  requests are admitted as soon as their *first prompt chunk* fits
+  (serve/scheduler.py), and one jit'd ``model_step`` per iteration
+  advances every in-flight sequence -- each contributing up to
+  ``chunk_tokens`` prompt-chunk tokens or 1 decode token, K/V written
+  straight into block-table pages (serve/paged_kv.py).  jit variants are
+  bounded per (max_slots, chunk, pool shape), independent of prompt
+  lengths.  ``prefill="monolithic"`` keeps the legacy
+  prefill-then-decode state machine (batch-1 prefill scattered into the
+  pool + ``decode_step_paged``): the only mode for hybrid mamba /
+  cross-attention patterns, and the chunked mode's TTFT baseline.
 
 AutoQ integration: the engine deploys a searched :class:`QuantPolicy` at
 weight-load time, with per-layer dispatch between two weight stores:
@@ -45,7 +51,9 @@ meshes).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import time
 from typing import Any, Dict, List, Optional, Sequence, Union
 
@@ -66,16 +74,40 @@ class ServeStats:
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
-    prefill_tokens: int = 0         # emitted during prefill, timed there
-    steps: int = 0                  # decode steps (run(): batched steps)
+    # tokens excluded from the decode rate: first tokens (sampled off prompt
+    # logits) and, in chunked mode, decode tokens riding chunk-carrying
+    # steps (whose time is accounted as prefill)
+    prefill_tokens: int = 0
+    steps: int = 0                  # engine steps (run(): batched steps)
     n_requests: int = 0
+    mode: str = ""                  # run(): "chunked" | "monolithic"
+    # prompt-token accounting by prefill style (how each prompt token was
+    # pushed through the model): budgeted chunks vs batch-1 monolithic
+    chunk_prefill_tokens: int = 0
+    mono_prefill_tokens: int = 0
+    # per-request time-to-first-token, keyed by request id: engine steps
+    # completed when the first token was emitted (chunked: the 1-based
+    # index of the step whose logits produced it; monolithic: the step
+    # count at admission), and wall-clock seconds since run() started
+    ttft_steps: Dict[int, int] = dataclasses.field(default_factory=dict)
+    ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    requeues: int = 0               # chunked: prefills preempted + requeued
+    reclaimed_pages: int = 0        # out-of-window pages returned mid-run
+    peak_pages: int = 0             # high-water mark of pool pages in use
 
     @property
     def decode_tok_per_s(self) -> float:
-        # run() samples each request's first token from the prefill logits
-        # (timed in prefill_s), so it must not inflate the decode rate
+        # tokens and time of prefill / chunk-carrying steps are excluded on
+        # both sides, so this is the steady-state decode-batch rate
         return ((self.tokens_out - self.prefill_tokens) / self.decode_s
                 if self.decode_s else 0.0)
+
+    def ttft_percentiles(self, qs=(50, 99)) -> Dict[int, float]:
+        """Percentiles of per-request TTFT seconds (empty dict if unset)."""
+        if not self.ttft_s:
+            return {}
+        vals = np.asarray(sorted(self.ttft_s.values()))
+        return {q: float(np.percentile(vals, q)) for q in qs}
 
 
 class ServeEngine:
@@ -125,12 +157,29 @@ class ServeEngine:
                     graph, [policy.act_bits.get(l.name, float(FULL_BITS))
                             for l in graph.layers])
         self.params = params
-        self._prefill = jax.jit(model.prefill,
+        # trace counters: each jit *trace* (i.e. each compiled variant) runs
+        # the python wrapper once, cache hits never do -- so these count
+        # compiled variants per entry point.  The chunked step loop is
+        # designed to keep trace_counts["model_step"] independent of the
+        # number of distinct prompt lengths (regression-tested).
+        self.trace_counts: Dict[str, int] = collections.Counter()
+
+        def counted(name, fn):
+            @functools.wraps(fn)
+            def wrapped(*a, **kw):
+                self.trace_counts[name] += 1
+                return fn(*a, **kw)
+            return wrapped
+
+        self._prefill = jax.jit(counted("prefill", model.prefill),
                                 static_argnames=("attn_impl",))
         self._decode = jax.jit(model.decode_step,
                                static_argnames=("attn_impl",))
-        self._decode_paged = jax.jit(model.decode_step_paged,
-                                     static_argnames=("attn_impl",))
+        self._decode_paged = jax.jit(
+            counted("decode_step_paged", model.decode_step_paged),
+            static_argnames=("attn_impl",))
+        self._model_step = jax.jit(counted("model_step", model.model_step),
+                                   static_argnames=("attn_impl",))
 
     def weight_hbm_bytes(self) -> Dict[str, int]:
         """Stored weight bytes by leaf kind.
@@ -196,7 +245,9 @@ class ServeEngine:
     # --------------------------------------------------- continuous batching
     def run(self, requests: Sequence[Union[Request, Dict[str, Any], tuple]],
             *, page_size: int = 16, max_slots: int = 8,
-            num_pages: Optional[int] = None) -> Dict[str, Any]:
+            num_pages: Optional[int] = None, prefill: Optional[str] = None,
+            chunk_tokens: Optional[int] = None,
+            token_budget: Optional[int] = None) -> Dict[str, Any]:
         """Serve a workload of mixed-length requests with continuous batching.
 
         requests: each a :class:`Request`, a ``{"tokens", "n_new",
@@ -205,21 +256,48 @@ class ServeEngine:
         follows the same rng discipline as a single-request
         :meth:`generate` call with that request's seed, so greedy outputs
         are comparable token-for-token against independent ``generate``
-        calls.
+        calls -- under *either* prefill mode:
+
+        * ``prefill="chunked"`` (default where supported): the unified
+          token-budget step loop.  Prefill and decode are one jit'd
+          ``model_step`` per iteration; each in-flight sequence contributes
+          up to ``chunk_tokens`` prompt-chunk tokens or 1 decode token,
+          bounded by ``token_budget`` real tokens per step, and prompt K/V
+          is written straight into block-table pages (no batch-1 dense
+          prefill, no per-prompt-length jit variants).  A request is
+          admitted as soon as its *first chunk* fits.  Requires every cache
+          kind to be ``"paged"`` (pure attention patterns).
+        * ``prefill="monolithic"``: the legacy state machine -- one batch-1
+          full-prompt prefill per admitted request scattered into the pool,
+          then batched single-token decode steps.  The only mode for hybrid
+          (mamba / cross-attention) patterns, whose recurrent state cannot
+          chunk; kept as the TTFT baseline for the chunked path
+          (benchmarks/continuous_batching.py).
+
+        ``prefill=None`` auto-selects chunked where supported.
+        chunk_tokens defaults to ``page_size``; token_budget to
+        ``max_slots + chunk_tokens - 1`` (every decode lane plus one full
+        chunk) and must be >= max_slots so decode lanes are never starved.
 
         page_size: KV positions per page.  max_slots: decode-batch width
         (compiled shape).  num_pages: pool size; default sizes for the
         worst case (``max_slots`` sequences at ``max_len``), which can never
-        stall.  A smaller pool throttles *admission* only -- already-running
-        sequences still grow a page at every boundary, and if concurrent
-        growth drains the pool mid-run, :class:`~.paged_kv.PagesExhausted`
-        propagates and the whole workload's outputs are lost (admission
-        headroom reserves one decode page per admit, not the lifetime
-        worst case).  Undersize it only for workloads whose total live KV
-        provably fits.
+        stall.  A smaller pool throttles admission (a request is admitted
+        when its prompt -- chunked: first chunk -- plus one page of decode
+        headroom fits); in chunked mode a sequence that cannot grow
+        mid-*prefill* is preempted and requeued (it has emitted nothing, so
+        its restarted stream is unchanged), and prefilling sequences are
+        preempted to keep *decode* lanes growing.  Only when nothing is
+        left to preempt -- the pool cannot back the running set's decode
+        growth, or a lone request can never fit -- does
+        :class:`~.paged_kv.PagesExhausted` propagate (in monolithic mode it
+        still propagates on any mid-run growth failure, as before).  For
+        all-sliding-window patterns, pages that fall wholly out of every
+        future attention window are reclaimed at each step boundary, so
+        pool occupancy is O(window) per sequence, not O(generated length).
 
         Returns ``{"outputs": [np.ndarray per request, submit order],
-        "stats": ServeStats}``.
+        "stats": ServeStats}`` (with per-request TTFT in ``stats``).
         """
         reqs = [self._as_request(i, r) for i, r in enumerate(requests)]
         for r in reqs:
@@ -227,21 +305,129 @@ class ServeEngine:
                 raise ValueError(
                     f"request {r.rid}: {r.prompt_len}+{r.n_new} tokens "
                     f"exceeds max_len={self.max_len}")
+        kinds = self.model.cfg.cache_kinds()
+        chunkable = all(kd == "paged" for kd in kinds)
+        if prefill is None:
+            prefill = "chunked" if chunkable else "monolithic"
+        if prefill not in ("chunked", "monolithic"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        if prefill == "chunked" and not chunkable:
+            raise ValueError(
+                f"prefill='chunked' needs all-paged cache kinds, got "
+                f"{kinds}: recurrent/memory blocks cannot chunk -- use "
+                "prefill='monolithic'")
         blocks_per_seq = paged_kv.pages_needed(self.max_len, page_size)
         if num_pages is None:
             num_pages = max_slots * blocks_per_seq + 1      # +1: trash page
         cache = self.model.init_paged_cache(max_slots, num_pages, page_size,
                                             dtype=self.cache_dtype,
                                             kv_bits=self.kv_bits)
-        kinds = self.model.cfg.cache_kinds()
         sched = Scheduler(max_slots, page_size,
                           blocks_per_seq, paged_kv.PageAllocator(num_pages))
         for r in reqs:
             sched.submit(r)
-
         outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
         rngs: Dict[int, jax.Array] = {}
-        stats = ServeStats(n_requests=len(reqs))
+        stats = ServeStats(n_requests=len(reqs), mode=prefill)
+        # out-of-window reclamation is sound only when *every* block of the
+        # pattern attends through the same sliding window (a single global
+        # block needs the whole history; one block table serves all layers)
+        cfg = self.model.cfg
+        reclaim = cfg.window if (chunkable and cfg.window is not None and
+                                 all(b.kind == "local_attn"
+                                     for b in cfg.pattern)) else None
+        args = (reqs, sched, cache, kinds, outputs, rngs, stats, num_pages,
+                page_size, reclaim)
+        if prefill == "chunked":
+            chunk = chunk_tokens if chunk_tokens is not None else page_size
+            budget = token_budget if token_budget is not None \
+                else max_slots + chunk - 1
+            if chunk < 1:
+                raise ValueError(f"chunk_tokens must be >= 1, got {chunk}")
+            if budget < max_slots:
+                raise ValueError(
+                    f"token_budget={budget} < max_slots={max_slots}: every "
+                    "decode lane needs a token each step (decode is never "
+                    "deferred); raise the budget or shrink the batch")
+            self._run_chunked(*args, chunk=chunk, budget=budget)
+        else:
+            self._run_monolithic(*args)
+        return {"outputs": [np.asarray(outputs[r.rid], np.int32)
+                            for r in reqs],
+                "stats": stats}
+
+    def _run_chunked(self, reqs, sched, cache, kinds, outputs, rngs, stats,
+                     num_pages, page_size, reclaim, *, chunk, budget):
+        """The unified token-budget step loop (prefill == decode)."""
+        t_run = time.time()
+        while sched.has_work:
+            if reclaim is not None:
+                stats.reclaimed_pages += len(
+                    sched.reclaim_out_of_window(reclaim))
+            # ---- admission: a request joins when its first chunk fits
+            fresh = []
+            while (adm := sched.try_admit_chunked(chunk)) is not None:
+                fresh += adm[2]
+            if not sched.running_slots():
+                raise paged_kv.PagesExhausted(
+                    "queued request cannot ever be admitted: pool of "
+                    f"{num_pages} pages (page_size={page_size}) is too "
+                    "small for its first chunk + decode headroom")
+            t0 = time.time()
+            plan = sched.plan_step(chunk, budget)
+            stats.requeues += len(plan["requeued"])
+            # scrub unconditionally: admission pages must be sentinel-clean
+            # before any later step writes chunks into them, even if this
+            # step is abandoned below
+            cache = paged_kv.scrub_pages(cache, kinds, fresh + plan["fresh"])
+            if not plan["sample"] and not plan["chunked"]:
+                continue            # every planned slot was preempted
+            # pure-decode steps run the (R, 1) column slice -- the second
+            # (and last) compiled variant; a (R, chunk) step would burn
+            # chunk-1 masked lanes per slot once every prompt is in.  jit
+            # variants stay 2 per (max_slots, chunk, pool shape), still
+            # independent of prompt lengths.
+            w = chunk if plan["chunked"] else 1
+            logits, cache = self._model_step(
+                self.params, jnp.asarray(plan["tokens"][:, :w]),
+                jnp.asarray(plan["positions"][:, :w]),
+                jnp.asarray(plan["slot_map"]), cache,
+                jnp.asarray(sched.tables.as_array()),
+                jnp.asarray(plan["logit_cols"]),
+                self.act_bits, attn_impl=self.attn_impl)
+            rows = np.asarray(logits[:, -1])
+            stats.chunk_prefill_tokens += sum(plan["chunked"].values())
+            for i in plan["sample"]:
+                s = sched.slot(i)
+                req = s.req
+                tok = self._next_token(req, rngs, rows[i:i + 1])
+                outputs[req.rid].append(tok)
+                stats.tokens_out += 1
+                if not s.out:                     # the request's first token
+                    stats.ttft_steps[req.rid] = stats.steps + 1
+                    stats.ttft_s[req.rid] = time.time() - t_run
+                    sched.record_first(i, tok)
+                else:
+                    sched.record(i, tok)
+            dt = time.time() - t0
+            # chunk-carrying steps are prefill-side: their time AND their
+            # sampled tokens (first tokens plus any decode lanes riding the
+            # step) leave the decode rate, so decode_tok_per_s measures the
+            # steady-state (R, 1) decode batch -- comparable across modes
+            if plan["chunked"]:
+                stats.prefill_s += dt
+                stats.prefill_tokens += len(plan["sample"])
+            else:
+                stats.decode_s += dt
+            stats.steps += 1
+            stats.peak_pages = max(stats.peak_pages,
+                                   num_pages - 1 - sched.allocator.n_free)
+
+    def _run_monolithic(self, reqs, sched, cache, kinds, outputs, rngs,
+                        stats, num_pages, page_size, reclaim):
+        """Legacy prefill-then-decode state machine (hybrid archs; TTFT
+        baseline for the chunked loop)."""
+        t_run = time.time()
         while sched.has_work:
             # ---- admission: prefill queued requests into free slots/pages
             admitted = 0
@@ -258,7 +444,12 @@ class ServeEngine:
                 outputs[req.rid].append(tok)
                 stats.tokens_out += 1
                 stats.prefill_tokens += 1
+                stats.mono_prefill_tokens += req.prompt_len
+                stats.ttft_steps[req.rid] = stats.steps
+                stats.ttft_s[req.rid] = time.time() - t_run
                 sched.bind(slot, req, tok)
+            stats.peak_pages = max(stats.peak_pages,
+                                   num_pages - 1 - sched.allocator.n_free)
 
             running = sched.running_slots()
             if not running:
@@ -271,6 +462,9 @@ class ServeEngine:
 
             # ---- one batched decode step over all in-flight sequences
             t0 = time.time()
+            if reclaim is not None:
+                stats.reclaimed_pages += len(
+                    sched.reclaim_out_of_window(reclaim))
             fresh = sched.ensure_pages()
             cache = paged_kv.scrub_pages(cache, kinds, fresh)
             b = sched.batch()
@@ -287,10 +481,6 @@ class ServeEngine:
                 sched.record(i, tok)
             stats.decode_s += time.time() - t0
             stats.steps += 1
-
-        return {"outputs": [np.asarray(outputs[r.rid], np.int32)
-                            for r in reqs],
-                "stats": stats}
 
     # ---------------------------------------------------------- run helpers
     @staticmethod

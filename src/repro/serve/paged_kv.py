@@ -41,12 +41,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# the models' sentinel convention (unwritten/unattendable KV positions) is
-# the single source of truth: the scheduler's idle-lane writes and the
-# pool's scrub value must be bit-equal to what the attention mask rejects
-from repro.models.transformer import POS_SENTINEL
-
-TRASH_PAGE = 0
+# the models' sentinel conventions (unwritten/unattendable KV positions;
+# the reserved trash page sentinel lanes write into) are the single source
+# of truth: the scheduler's idle-lane writes, the pool's scrub value and
+# the allocator's reserved page must be bit-equal to what the model's
+# attention mask rejects and its paged write path routes to
+from repro.models.transformer import POS_SENTINEL, TRASH_PAGE
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
@@ -107,8 +107,14 @@ class BlockTables:
         self._held: Dict[int, List[int]] = {s: [] for s in range(n_slots)}
 
     def held(self, slot: int) -> List[int]:
-        """Physical pages currently mapped by ``slot``, logical order."""
+        """Per-logical-block entries for ``slot``: physical page ids, with
+        ``TRASH_PAGE`` placeholders where a leading block was reclaimed
+        (:meth:`free_prefix`) -- logical indices never shift."""
         return list(self._held[slot])
+
+    def n_live(self, slot: int) -> int:
+        """Physical pages actually held (excludes reclaimed placeholders)."""
+        return sum(1 for p in self._held[slot] if p != TRASH_PAGE)
 
     def n_blocks(self, slot: int) -> int:
         return len(self._held[slot])
@@ -124,9 +130,29 @@ class BlockTables:
             self._table[slot, start + i] = p
         self._held[slot].extend(pages)
 
+    def free_prefix(self, slot: int, upto: int) -> List[int]:
+        """Unmap still-held pages of logical blocks ``[0, upto)``.
+
+        Out-of-window reclamation for sliding-window sequences: the freed
+        entries become ``TRASH_PAGE`` placeholders in both the table row and
+        the held list, so later blocks keep their logical indices (block
+        ``i`` must always mean positions ``i*page_size ..``) and gathers of
+        the reclaimed range read the all-sentinel trash page.  Returns the
+        freed physical pages (caller returns them to the allocator).
+        """
+        held = self._held[slot]
+        freed = []
+        for b in range(min(upto, len(held))):
+            if held[b] != TRASH_PAGE:
+                freed.append(held[b])
+                held[b] = TRASH_PAGE
+                self._table[slot, b] = TRASH_PAGE
+        return freed
+
     def release(self, slot: int) -> List[int]:
-        """Unmap and return the slot's pages (caller frees them)."""
-        pages = self._held[slot]
+        """Unmap and return the slot's pages (caller frees them; reclaimed
+        placeholder blocks are skipped -- their pages were freed already)."""
+        pages = [p for p in self._held[slot] if p != TRASH_PAGE]
         self._held[slot] = []
         self._table[slot, :] = TRASH_PAGE
         return pages

@@ -1,29 +1,38 @@
 """Continuous-batching request scheduler for the paged serving engine.
 
-Iteration-level (Orca-style) scheduling: the decode batch is a fixed array
-of *slots*; at every engine step, finished sequences leave their slot and
+Iteration-level (Orca-style) scheduling: the batch is a fixed array of
+*slots*; at every engine step, finished sequences leave their slot and
 free their pages, and queued requests are admitted into free slots -- new
-work joins the decode batch between single-token steps instead of waiting
-for the whole batch to drain.
+work joins the batch between steps instead of waiting for the whole batch
+to drain.  Two admission styles share the slot table:
+
+* **chunked** (:meth:`try_admit_chunked` + :meth:`plan_step`, the engine
+  default): a request is admitted when its *first prompt chunk* fits, and
+  the prompt is fed chunk by chunk through the engine's unified
+  ``model_step`` under a per-step token budget -- decode lanes take 1
+  token each first, the remainder funds prompt chunks.  A prefilling
+  sequence whose pages cannot grow is preempted and *requeued* (it has
+  emitted nothing, so a restart replays the identical stream).
+* **monolithic** (:meth:`try_admit` + :meth:`batch`): the legacy path --
+  the whole prompt's pages up front, one batch-1 prefill per request
+  (hybrid mamba/cross-attn patterns only chunk this way).
 
 State machine per request::
 
-    submit() -> QUEUED --admit()--> RUNNING --(n_new tokens)--> FINISHED
-                  ^                    |
-                  '-- stays queued if no free slot / not enough free pages
+    submit() -> QUEUED --admit--> RUNNING: prefilling --> RUNNING: decoding
+                  ^                  | (chunked only)          |
+                  |                  '--requeue (preempted)    v
+                  '-- stays queued if no free slot /       FINISHED
+                      not enough free pages
 
-Page lifecycle (the scheduler is the only allocator client):
-
-* **admit**: allocates ``ceil(prompt_len / page_size)`` pages for the
-  prompt; admission is refused (request stays queued, FIFO order kept)
-  unless that many pages *plus one decode page of headroom* are free.
-* **decode**: before each engine step, :meth:`ensure_pages` extends any
-  running sequence whose next write position crosses a page boundary by one
-  page.  If the pool is exhausted here, :class:`~.paged_kv.PagesExhausted`
-  propagates -- size the pool for the worst case (the engine's default
-  does) or accept admission backpressure as the only throttle.
-* **finish/release**: all of the sequence's pages go back to the free-list
-  and its block-table row resets to the trash page.
+Page lifecycle (the scheduler is the only allocator client): pages are
+allocated at admission (first chunk / whole prompt) and as write positions
+cross page boundaries (:meth:`plan_step` / :meth:`ensure_pages`); freed at
+finish, at requeue, and -- for all-sliding-window patterns -- as soon as a
+page falls wholly behind every future attention window
+(:meth:`reclaim_out_of_window`).  Exhaustion mid-growth raises
+:class:`~.paged_kv.PagesExhausted` only when no prefilling sequence is
+left to preempt.
 
 The scheduler is pure host-side bookkeeping (numpy block tables, Python
 free-list): it never touches device arrays.  The engine owns jit'd model
@@ -38,7 +47,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serve.paged_kv import (POS_SENTINEL, BlockTables, PageAllocator,
-                                  pages_needed)
+                                  PagesExhausted, pages_needed)
 
 
 @dataclasses.dataclass
@@ -68,10 +77,17 @@ class _Slot:
     req: Request
     pos: int                      # next write position (= tokens seen so far)
     out: List[int]                # emitted tokens
+    seq: int = 0                  # admission order stamp (requeue keeps FIFO)
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.req.n_new
+
+    @property
+    def prefilling(self) -> bool:
+        """Chunked admission: prompt tokens still to be fed.  (Monolithic
+        admission binds at ``pos == prompt_len``, so it is never True.)"""
+        return self.pos < self.req.prompt_len
 
 
 _RESERVED = object()      # slot handed out by try_admit, awaiting bind()
@@ -89,6 +105,7 @@ class Scheduler:
         self._queue: Deque[Request] = deque()
         self._slots: List[Optional[_Slot]] = [None] * n_slots
         self.n_finished = 0
+        self._admit_seq = 0       # admissions so far (stamps _Slot.seq)
 
     # ------------------------------------------------------------- queries
     @property
@@ -150,6 +167,186 @@ class Scheduler:
             self._release(slot)
             return True
         return False
+
+    # --------------------------------------------------- chunked admission
+    def try_admit_chunked(self, chunk: int
+                          ) -> Optional[Tuple[Request, int, List[int]]]:
+        """Admit the queue head when its *first chunk* fits.
+
+        Unlike :meth:`try_admit`, admission requires pages for only
+        ``min(chunk, prompt_len)`` positions (plus the usual one-page
+        headroom, capped at the request's lifetime total) -- a long prompt
+        no longer waits for its whole page run to be free.  The slot is
+        installed RUNNING immediately with a chunk cursor at position 0;
+        the step loop (:meth:`plan_step`) feeds the prompt chunk by chunk
+        and samples the first token when the cursor reaches the prompt end.
+        Returns (request, slot, first-chunk pages to scrub) or None.
+        """
+        if not self._queue:
+            return None
+        free_slot = next((i for i, s in enumerate(self._slots) if s is None),
+                         None)
+        if free_slot is None:
+            return None
+        req = self._queue[0]
+        need = pages_needed(min(chunk, req.prompt_len), self.page_size)
+        total = pages_needed(req.prompt_len + req.n_new - 1, self.page_size)
+        if self.allocator.n_free < min(need + 1, total):
+            return None                          # wait: chunk + headroom
+        self._queue.popleft()
+        pages = self.allocator.alloc(need)
+        self.tables.append(free_slot, pages)
+        self._slots[free_slot] = _Slot(req=req, pos=0, out=[],
+                                       seq=self._admit_seq)
+        self._admit_seq += 1
+        return req, free_slot, pages
+
+    def plan_step(self, chunk: int, token_budget: int) -> Dict[str, object]:
+        """Build one fixed-shape ``(n_slots, chunk)`` token-budget batch.
+
+        Every decode-ready slot contributes its 1 feedback token first
+        (decode is never starved); the remaining budget funds prompt-chunk
+        tokens for prefilling slots in slot order, up to ``chunk`` per slot
+        per step (partial chunks are fine -- padded columns carry sentinel
+        positions).  Newly needed pages are allocated here; if a *chunk*
+        cannot be backed, the youngest prefilling slot is requeued (pages
+        freed, request back at the queue head -- it has emitted nothing, so
+        a later restart reproduces its stream) rather than failing the
+        whole workload; if a *decode* token cannot be backed, prefilling
+        slots are requeued to free pages first and only then does
+        :class:`~.paged_kv.PagesExhausted` propagate (nothing left to
+        preempt: the pool is smaller than the running set's worst case).
+
+        Returns ``{"tokens", "positions", "slot_map", "logit_cols"``
+        (device-ready arrays)``, "sample"`` (slots emitting a token this
+        step; a prefilling slot appears exactly when this step's chunk
+        reaches its prompt end)``, "chunked"`` (slot -> chunk tokens fed)
+        ``, "fresh"`` (pages to scrub)``, "requeued"`` (request ids sent
+        back to the queue)``}``.
+        """
+        n = self.n_slots
+        tokens = np.zeros((n, chunk), np.int32)
+        positions = np.full((n, chunk), POS_SENTINEL, np.int32)
+        logit_cols = np.zeros((n,), np.int32)
+        sample: List[int] = []
+        fresh: List[int] = []
+        preempted: List[_Slot] = []
+        chunked: Dict[int, int] = {}
+        budget = token_budget
+
+        for i in self.running_slots():           # decode lanes first
+            s = self.slot(i)
+            if s.prefilling:
+                continue
+            while True:
+                try:
+                    fresh += self._ensure_block(i, s.pos)
+                    break
+                except PagesExhausted:
+                    victim = self._youngest_prefilling()
+                    if victim is None:
+                        raise
+                    preempted.append(self._preempt(victim))
+            tokens[i, 0] = s.out[-1]
+            positions[i, 0] = s.pos
+            sample.append(i)
+            budget -= 1
+
+        for i in self.running_slots():           # then prompt chunks
+            s = self._slots[i]
+            if not isinstance(s, _Slot) or not s.prefilling:
+                continue
+            c = min(chunk, s.req.prompt_len - s.pos, max(budget, 0))
+            if c <= 0:
+                continue                         # idle this step (budget)
+            try:
+                for p in range(s.pos, s.pos + c):
+                    fresh += self._ensure_block(i, p)
+            except PagesExhausted:
+                if all(not (isinstance(o, _Slot) and o is not s)
+                       for o in self._slots):
+                    raise                        # alone and cannot grow
+                preempted.append(self._preempt(i))
+                continue
+            tokens[i, :c] = s.req.tokens[s.pos:s.pos + c]
+            positions[i, :c] = np.arange(s.pos, s.pos + c, dtype=np.int32)
+            chunked[i] = c
+            s.pos += c
+            budget -= c
+            if not s.prefilling:                 # chunk reached prompt end
+                logit_cols[i] = c - 1
+                sample.append(i)
+        # re-insert preempted requests youngest-admission first, so the
+        # oldest ends up at the queue front: FIFO order survives even a
+        # multi-preemption step
+        for s in sorted(preempted, key=lambda s: s.seq, reverse=True):
+            self._queue.appendleft(s.req)
+        return {"tokens": tokens, "positions": positions,
+                "slot_map": np.arange(n, dtype=np.int32),
+                "logit_cols": logit_cols, "sample": sample,
+                "chunked": chunked, "fresh": fresh,
+                "requeued": [s.req.rid for s in preempted]}
+
+    def record_first(self, slot: int, token: int) -> bool:
+        """Record a chunk-completed slot's first token (sampled from this
+        step's logits at the prompt's last position).  The cursor stays at
+        ``prompt_len`` -- exactly :meth:`bind`'s contract -- so the next
+        step decodes from there.  Returns True when n_new == 1 (done)."""
+        s = self.slot(slot)
+        assert not s.out and not s.prefilling
+        s.out.append(int(token))
+        if s.done:
+            self._release(slot)
+            return True
+        return False
+
+    def _ensure_block(self, slot: int, pos: int) -> List[int]:
+        """Back write position ``pos`` of ``slot`` with a page (may alloc)."""
+        if pos // self.page_size >= self.tables.n_blocks(slot):
+            page = self.allocator.alloc(1)
+            self.tables.append(slot, page)
+            return page
+        return []
+
+    def _youngest_prefilling(self) -> Optional[int]:
+        """Prefilling slot with the least progress (cheapest to restart)."""
+        cand = [(self.slot(i).pos, i) for i in self.running_slots()
+                if self.slot(i).prefilling]
+        return min(cand)[1] if cand else None
+
+    def _preempt(self, slot: int) -> _Slot:
+        """Preempt a prefilling slot: free its pages, vacate the slot.
+
+        Only legal mid-prefill (no tokens emitted yet), so the restart
+        replays the prompt from scratch and the emitted stream is
+        unchanged.  The caller re-inserts the request at the queue front in
+        admission (seq) order -- everything preempted was admitted before
+        anything still queued, so FIFO order is kept."""
+        s = self.slot(slot)
+        assert not s.out, "requeue after tokens were emitted would drop them"
+        self.allocator.free(self.tables.release(slot))
+        self._slots[slot] = None
+        return s
+
+    def reclaim_out_of_window(self, window: int) -> List[int]:
+        """Return pages wholly behind every future attention window.
+
+        For all-sliding-window patterns the next query position of slot
+        ``i`` is ``pos``; it (and every later one) attends positions
+        ``> pos - window`` only, so logical blocks entirely below
+        ``(pos - window + 1)`` are dead.  They go back to the free list at
+        the step boundary -- the paged kernel never fetched them anyway
+        (its ``first`` re-basing uses the same arithmetic).  Pool occupancy
+        becomes O(window) per sequence instead of O(generated length).
+        """
+        freed: List[int] = []
+        for i in self.running_slots():
+            s = self.slot(i)
+            first_live = max(0, s.pos - window + 1) // self.page_size
+            freed += self.tables.free_prefix(i, first_live)
+        if freed:
+            self.allocator.free(freed)
+        return freed
 
     # -------------------------------------------------------------- decode
     def ensure_pages(self) -> List[int]:

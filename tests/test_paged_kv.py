@@ -177,10 +177,12 @@ def test_run_more_requests_than_slots_reuses_pages():
 @pytest.mark.slow
 def test_run_matches_generate_hybrid_mamba_moe_arch():
     """jamba smoke: recurrent (slot-indexed) mamba state + attn + MoE ride
-    the paged engine via the cache_kinds dispatch."""
+    the paged engine via the cache_kinds dispatch (auto-falling back to
+    monolithic prefill: state blocks cannot chunk)."""
     cfg, eng = _engine("jamba-1.5-large-398b", max_len=32)
     reqs = _requests(cfg.vocab, [(4, 4), (6, 3), (3, 5), (5, 4)], seed=7)
-    _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=2)
+    res = _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=2)
+    assert res["stats"].mode == "monolithic"
 
 
 def _mixed_policy(model, seed=0):
@@ -286,7 +288,203 @@ def test_run_rejects_oversized_request():
         eng.run(reqs, page_size=4)
 
 
+# ------------------------------------------- chunked prefill (tentpole)
+def test_run_chunked_matches_generate_across_chunk_sizes():
+    """The token-budget step loop is invisible to the numerics: any chunk
+    size (single token, sub-page, page-crossing; plus partial final chunks)
+    reproduces independent generate calls per request.  (chunk ==
+    page_size is every default-run parity test in this file.)"""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    reqs = _requests(cfg.vocab, MIXED_8)
+    refs = [eng.generate(toks[None], n)["tokens"][0] for toks, n in reqs]
+    for chunk in (1, 3, 8):
+        res = eng.run(reqs, page_size=4, max_slots=8, prefill="chunked",
+                      chunk_tokens=chunk)
+        for i, (ref, out) in enumerate(zip(refs, res["outputs"])):
+            np.testing.assert_array_equal(out, ref,
+                                          err_msg=f"chunk={chunk} req {i}")
+        assert res["stats"].mode == "chunked"
+        assert res["stats"].chunk_prefill_tokens == \
+            sum(s for s, _ in MIXED_8)
+        assert res["stats"].mono_prefill_tokens == 0
+
+
+def test_run_chunked_matches_generate_window_and_int8():
+    """Chunk boundaries crossing the sliding window and int8 KV pages at
+    once: the hardest parity cell (chunk tokens attend earlier chunks
+    through quantized pages exactly as the dense oracle's prefill does)."""
+    cfg, eng = _engine("gemma2-2b", max_len=32, kv_bits=8)
+    reqs = _requests(cfg.vocab, MIXED_8[:4], seed=21)
+    _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=3,
+                                 prefill="chunked", chunk_tokens=3)
+
+
+def test_run_monolithic_mode_still_matches_generate():
+    """The legacy batch-1 prefill path stays available (hybrid archs, TTFT
+    baseline) and stays parity-gated."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    reqs = _requests(cfg.vocab, MIXED_8[:3], seed=17)
+    res = _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=2,
+                                       prefill="monolithic")
+    assert res["stats"].mode == "monolithic"
+    assert res["stats"].mono_prefill_tokens == \
+        sum(s for s, _ in MIXED_8[:3])
+    assert res["stats"].chunk_prefill_tokens == 0
+
+
+def test_run_token_budget_tight_and_validated():
+    """A budget of exactly max_slots still makes >= 1 chunk token of
+    progress per step (decode lanes first, leftovers fund chunks), and
+    invalid budgets/chunk sizes are rejected up front."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    reqs = _requests(cfg.vocab, MIXED_8[:4], seed=19)
+    res = _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=2,
+                                       prefill="chunked", chunk_tokens=4,
+                                       token_budget=3)
+    assert set(res["stats"].ttft_steps) == {r for r in range(4)}
+    with pytest.raises(ValueError, match="token_budget"):
+        eng.run(reqs, page_size=4, max_slots=4, token_budget=2)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        eng.run(reqs, page_size=4, max_slots=2, chunk_tokens=0)
+
+
+def test_run_chunked_rejects_hybrid_pattern():
+    """Recurrent (mamba) state cannot chunk: forcing chunked on a hybrid
+    arch fails fast, before any model call.  (Auto fallback to monolithic
+    is asserted in the slow hybrid parity test.)"""
+    cfg, eng = _engine("jamba-1.5-large-398b", max_len=16)
+    reqs = _requests(cfg.vocab, [(3, 2)], seed=1)
+    with pytest.raises(ValueError, match="chunk"):
+        eng.run(reqs, page_size=4, max_slots=1, prefill="chunked")
+
+
+def test_run_chunked_requeues_instead_of_failing_mid_admission():
+    """Satellite fix: with chunked admission a prefilling sequence that
+    cannot grow its pages is preempted and requeued (not an exception), and
+    its restarted stream is identical to the oracle."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    # two 12-token prompts, pool of 6 usable pages (page_size 4): each
+    # prompt alone needs 3 pages + headroom, so both admit on first-chunk
+    # availability but cannot both finish prefill -- one must requeue
+    reqs = _requests(cfg.vocab, [(12, 4), (12, 4)], seed=23)
+    res = _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=2,
+                                       num_pages=7, prefill="chunked",
+                                       chunk_tokens=4)
+    assert res["stats"].requeues >= 1
+    assert res["stats"].steps > 0
+
+
+def test_run_chunked_pool_too_small_still_raises():
+    """Requeueing never helps a request that can never fit alone: the
+    honest PagesExhausted diagnosis survives the chunked refactor."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    reqs = _requests(cfg.vocab, [(12, 4)])
+    with pytest.raises(PagesExhausted):
+        eng.run(reqs, page_size=4, max_slots=1, num_pages=3,
+                prefill="chunked")
+
+
+def test_jit_trace_count_independent_of_prompt_lengths():
+    """Regression (satellite): serving N distinct prompt lengths through
+    the chunked loop traces model_step a constant number of times -- the
+    per-prompt-length variant explosion cannot come back -- and never
+    touches the retired batch-1 prefill path."""
+    cfg = ARCHS["internlm2-20b"].smoke
+    model = LM(cfg)
+    params = model.init(KEY)
+
+    def serve(shapes):
+        eng = ServeEngine(model, params, max_len=32)
+        eng.run(_requests(cfg.vocab, shapes, seed=29), page_size=4,
+                max_slots=4, prefill="chunked")
+        return dict(eng.trace_counts)
+
+    ten = serve([(s, 3) for s in range(2, 12)])      # 10 distinct lengths
+    two = serve([(3, 3), (9, 3)])                    # 2 distinct lengths
+    assert ten["model_step"] == two["model_step"]
+    assert ten["model_step"] <= 2      # mixed-step + pure-decode variants
+    assert ten.get("prefill", 0) == 0 and ten.get("decode_step_paged", 0) == 0
+    # (the monolithic variant-per-length explosion this retires is gated in
+    # benchmarks/continuous_batching.py --smoke, which CI runs)
+
+
+def _all_local_cfg(window=8):
+    import dataclasses as dc
+    base = ARCHS["gemma2-2b"].smoke
+    return dc.replace(base, pattern=(base.pattern[0], base.pattern[0]),
+                      window=window)
+
+
+def test_out_of_window_pages_reclaimed_occupancy_bounded():
+    """Satellite: for an all-sliding-window pattern, pages wholly behind
+    the window return to the pool at step boundaries -- occupancy stays
+    O(window) and a long generation completes in a pool far smaller than
+    its full history (it would exhaust without reclamation) with the token
+    stream unchanged."""
+    cfg = _all_local_cfg(window=8)
+    model = LM(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, max_len=64)
+    toks = _requests(cfg.vocab, [(4, 40)], seed=31)[0][0]
+    # lifetime positions 4+40-1=43 -> 11 pages of 4; give the pool 6 usable
+    res = eng.run([(toks, 40)], page_size=4, max_slots=1, num_pages=7,
+                  prefill="chunked")
+    ref = eng.generate(toks[None], 40)["tokens"][0]
+    np.testing.assert_array_equal(res["outputs"][0], ref)
+    st = res["stats"]
+    assert st.reclaimed_pages > 0
+    # O(window): in-window blocks (ceil(W/ps)+1 for straddle) + 1 growth
+    assert st.peak_pages <= 4
+    # and the monolithic loop reclaims too (same scheduler hook)
+    res_m = eng.run([(toks, 40)], page_size=4, max_slots=1, num_pages=7,
+                    prefill="monolithic")
+    np.testing.assert_array_equal(res_m["outputs"][0], ref)
+    assert res_m["stats"].reclaimed_pages > 0
+
+
+def test_reclamation_disabled_for_mixed_global_local_pattern():
+    """gemma2 alternates local/global blocks; one block table serves every
+    layer, so reclaiming for the local blocks would tear KV the global
+    blocks still attend -- the engine must not reclaim there."""
+    cfg, eng = _engine("gemma2-2b", max_len=32)
+    reqs = _requests(cfg.vocab, [(4, 12)], seed=33)
+    res = _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=1)
+    assert res["stats"].reclaimed_pages == 0
+
+
+def test_stats_ttft_and_prefill_accounting():
+    """Satellite: per-request TTFT (steps + seconds) and chunked-vs-
+    monolithic prompt-token accounting are populated on both paths."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    reqs = _requests(cfg.vocab, MIXED_8[:3], seed=37)
+    total_prompt = sum(s for s, _ in MIXED_8[:3])
+    for mode in ("chunked", "monolithic"):
+        res = eng.run(reqs, page_size=4, max_slots=2, prefill=mode)
+        st = res["stats"]
+        assert st.mode == mode
+        assert sorted(st.ttft_steps) == [0, 1, 2]
+        assert all(v >= 0 for v in st.ttft_s.values())
+        fed = (st.chunk_prefill_tokens if mode == "chunked"
+               else st.mono_prefill_tokens)
+        assert fed == total_prompt
+        assert st.ttft_percentiles()[99] >= st.ttft_percentiles()[50]
+
+
 # ------------------------------------------------------------ paged pool unit
+def test_block_tables_free_prefix_keeps_logical_alignment():
+    """Reclaimed leading blocks become trash placeholders: later blocks
+    keep their logical index, release() frees only live pages."""
+    bt = paged_kv.BlockTables(1, 4)
+    bt.append(0, [5, 7, 3])
+    assert bt.free_prefix(0, 2) == [5, 7]
+    assert bt.as_array()[0].tolist() == [0, 0, 3, 0]
+    assert bt.n_blocks(0) == 3 and bt.n_live(0) == 1
+    assert bt.free_prefix(0, 2) == []          # idempotent
+    bt.append(0, [9])                          # growth continues past holes
+    assert bt.as_array()[0].tolist() == [0, 0, 3, 9]
+    assert bt.release(0) == [3, 9]
+
+
 def test_scrub_pages_resets_only_named_pages():
     cfg = ARCHS["internlm2-20b"].smoke
     model = LM(cfg)
