@@ -62,10 +62,16 @@ def _workload(n_requests: int, n_new: int, vocab: int, max_len: int,
     chunked prefill exists to fix.
     """
     rng = np.random.default_rng(seed)
-    long_len = max_len - n_new
+    cap = max_len - n_new                  # longest legal prompt
+    if cap < 1:
+        raise ValueError(f"max_len={max_len} leaves no room for a prompt "
+                         f"before n_new={n_new} generated tokens")
     reqs = []
     for i in range(n_requests):
-        s = long_len - i if i % 4 == 0 else 4 + i
+        if i % 4 == 0:                     # long: top half of the range
+            s = cap - (i // 4) % max(1, cap // 2)
+        else:                              # short, distinct until they wrap
+            s = 1 + (3 + i) % cap
         reqs.append((rng.integers(0, vocab, size=int(s)).astype(np.int32),
                      n_new))
     return reqs

@@ -270,6 +270,13 @@ class LM:
                         k = kq.astype(jnp.float32) * ks[..., None]
                         vq, vs = _kv_quant(v)
                         v = vq.astype(jnp.float32) * vs[..., None]
+                    elif cache["k"].dtype != k.dtype:
+                        # same contract for narrow fp caches (bf16): attend
+                        # the cache-dtype round trip the chunked paged path
+                        # reads back, keeping run() == generate() parity
+                        # independent of cache_dtype
+                        k = k.astype(cache["k"].dtype).astype(k.dtype)
+                        v = v.astype(cache["v"].dtype).astype(v.dtype)
         chunk = k.shape[1] if S == 1 else 1024
         out = attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal,
                         window=window, attn_cap=cfg.attn_softcap, chunk=chunk,

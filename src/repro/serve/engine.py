@@ -85,10 +85,12 @@ class ServeStats:
     # pushed through the model): budgeted chunks vs batch-1 monolithic
     chunk_prefill_tokens: int = 0
     mono_prefill_tokens: int = 0
-    # per-request time-to-first-token, keyed by request id: engine steps
-    # completed when the first token was emitted (chunked: the 1-based
-    # index of the step whose logits produced it; monolithic: the step
-    # count at admission), and wall-clock seconds since run() started
+    # per-request time-to-first-token, keyed by request id: the 1-based
+    # index of the model call whose logits produced the first token
+    # (chunked: the step that completed the prompt; monolithic: the
+    # admission prefill, counted as if it were the next step -- same
+    # convention, so step-based TTFT compares across modes), and
+    # wall-clock seconds since run() started
     ttft_steps: Dict[int, int] = dataclasses.field(default_factory=dict)
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
     requeues: int = 0               # chunked: prefills preempted + requeued
@@ -173,7 +175,7 @@ class ServeEngine:
 
         self._prefill = jax.jit(counted("prefill", model.prefill),
                                 static_argnames=("attn_impl",))
-        self._decode = jax.jit(model.decode_step,
+        self._decode = jax.jit(counted("decode_step", model.decode_step),
                                static_argnames=("attn_impl",))
         self._decode_paged = jax.jit(
             counted("decode_step_paged", model.decode_step_paged),
@@ -376,6 +378,12 @@ class ServeEngine:
             t0 = time.time()
             plan = sched.plan_step(chunk, budget)
             stats.requeues += len(plan["requeued"])
+            # a request admitted above may have been preempted inside this
+            # very plan_step: its admission pages are back on the free list
+            # (possibly re-allocated -- then they are in plan["fresh"] under
+            # the new owner), so drop the stale aliases from the scrub set
+            drop = set(plan["freed"])
+            fresh = [p for p in fresh if p not in drop]
             # scrub unconditionally: admission pages must be sentinel-clean
             # before any later step writes chunks into them, even if this
             # step is abandoned below
@@ -445,7 +453,7 @@ class ServeEngine:
                 stats.tokens_out += 1
                 stats.prefill_tokens += 1
                 stats.mono_prefill_tokens += req.prompt_len
-                stats.ttft_steps[req.rid] = stats.steps
+                stats.ttft_steps[req.rid] = stats.steps + 1
                 stats.ttft_s[req.rid] = time.time() - t_run
                 sched.bind(slot, req, tok)
             stats.peak_pages = max(stats.peak_pages,
@@ -461,10 +469,12 @@ class ServeEngine:
                 continue                    # everything admitted finished
 
             # ---- one batched decode step over all in-flight sequences
-            t0 = time.time()
+            # reclaim outside the timed section, like the chunked loop, so
+            # decode_s compares like-for-like across modes
             if reclaim is not None:
                 stats.reclaimed_pages += len(
                     sched.reclaim_out_of_window(reclaim))
+            t0 = time.time()
             fresh = sched.ensure_pages()
             cache = paged_kv.scrub_pages(cache, kinds, fresh)
             b = sched.batch()

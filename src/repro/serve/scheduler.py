@@ -222,7 +222,9 @@ class Scheduler:
         step; a prefilling slot appears exactly when this step's chunk
         reaches its prompt end)``, "chunked"`` (slot -> chunk tokens fed)
         ``, "fresh"`` (pages to scrub)``, "requeued"`` (request ids sent
-        back to the queue)``}``.
+        back to the queue)``, "freed"`` (pages free-listed by preemptions
+        this step -- the engine must drop any stale aliases of them, e.g.
+        admission pages, from its own scrub set)``}``.
         """
         n = self.n_slots
         tokens = np.zeros((n, chunk), np.int32)
@@ -230,13 +232,17 @@ class Scheduler:
         logit_cols = np.zeros((n,), np.int32)
         sample: List[int] = []
         fresh: List[int] = []
+        freed: List[int] = []
         preempted: List[_Slot] = []
         chunked: Dict[int, int] = {}
         budget = token_budget
 
+        # index over a snapshot, re-check liveness: preempting a prefilling
+        # slot to back a decode lane vacates entries this loop has not yet
+        # reached
         for i in self.running_slots():           # decode lanes first
-            s = self.slot(i)
-            if s.prefilling:
+            s = self._slots[i]
+            if not isinstance(s, _Slot) or s.prefilling:
                 continue
             while True:
                 try:
@@ -246,7 +252,9 @@ class Scheduler:
                     victim = self._youngest_prefilling()
                     if victim is None:
                         raise
-                    preempted.append(self._preempt(victim))
+                    v, pages = self._preempt(victim)
+                    preempted.append(v)
+                    freed += pages
             tokens[i, 0] = s.out[-1]
             positions[i, 0] = s.pos
             sample.append(i)
@@ -259,15 +267,22 @@ class Scheduler:
             c = min(chunk, s.req.prompt_len - s.pos, max(budget, 0))
             if c <= 0:
                 continue                         # idle this step (budget)
+            added: List[int] = []                # this slot's new pages only
             try:
                 for p in range(s.pos, s.pos + c):
-                    fresh += self._ensure_block(i, p)
+                    added += self._ensure_block(i, p)
             except PagesExhausted:
                 if all(not (isinstance(o, _Slot) and o is not s)
                        for o in self._slots):
                     raise                        # alone and cannot grow
-                preempted.append(self._preempt(i))
+                # _preempt frees `added` back to the allocator; keeping the
+                # pages out of `fresh` stops the engine scrubbing free-listed
+                # (possibly re-allocated) pages
+                v, pages = self._preempt(i)
+                preempted.append(v)
+                freed += pages
                 continue
+            fresh += added
             tokens[i, :c] = s.req.tokens[s.pos:s.pos + c]
             positions[i, :c] = np.arange(s.pos, s.pos + c, dtype=np.int32)
             chunked[i] = c
@@ -284,7 +299,7 @@ class Scheduler:
         return {"tokens": tokens, "positions": positions,
                 "slot_map": np.arange(n, dtype=np.int32),
                 "logit_cols": logit_cols, "sample": sample,
-                "chunked": chunked, "fresh": fresh,
+                "chunked": chunked, "fresh": fresh, "freed": freed,
                 "requeued": [s.req.rid for s in preempted]}
 
     def record_first(self, slot: int, token: int) -> bool:
@@ -314,19 +329,22 @@ class Scheduler:
                 if self.slot(i).prefilling]
         return min(cand)[1] if cand else None
 
-    def _preempt(self, slot: int) -> _Slot:
+    def _preempt(self, slot: int) -> Tuple[_Slot, List[int]]:
         """Preempt a prefilling slot: free its pages, vacate the slot.
 
         Only legal mid-prefill (no tokens emitted yet), so the restart
         replays the prompt from scratch and the emitted stream is
         unchanged.  The caller re-inserts the request at the queue front in
         admission (seq) order -- everything preempted was admitted before
-        anything still queued, so FIFO order is kept."""
+        anything still queued, so FIFO order is kept.  Returns the slot
+        state and the pages freed, so the planner can report free-listed
+        pages (the engine must not scrub them under a stale alias)."""
         s = self.slot(slot)
         assert not s.out, "requeue after tokens were emitted would drop them"
-        self.allocator.free(self.tables.release(slot))
+        pages = self.tables.release(slot)
+        self.allocator.free(pages)
         self._slots[slot] = None
-        return s
+        return s, pages
 
     def reclaim_out_of_window(self, window: int) -> List[int]:
         """Return pages wholly behind every future attention window.

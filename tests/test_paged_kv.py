@@ -131,6 +131,67 @@ def test_scheduler_idle_lanes_carry_sentinel_pos():
     assert b["pos"][slot] == 3
 
 
+def test_plan_step_decode_preempting_later_slot_survives_iteration():
+    """Regression: a decode lane at a page boundary that preempts a
+    prefilling slot at a *later* index must not crash plan_step when the
+    stale running-slot snapshot reaches the vacated entry.  This is
+    exactly the memory-pressure scenario preempt-and-requeue exists for."""
+    sched = Scheduler(n_slots=2, page_size=4, blocks_per_seq=4,
+                      allocator=PageAllocator(4))        # 3 usable pages
+    a = Request(0, np.arange(4, dtype=np.int32), n_new=6)
+    sched.submit(a)
+    assert sched.try_admit_chunked(4) is not None        # 1 page, 2 free
+    plan = sched.plan_step(4, 8)                         # full prompt chunk
+    assert plan["sample"] == [0]
+    sched.record_first(0, 11)
+    b = Request(1, np.arange(8, dtype=np.int32), n_new=2)
+    sched.submit(b)
+    assert sched.try_admit_chunked(4) is not None        # 1 page, 1 free
+    # budget 1: the decode lane takes it all, slot 1 idles mid-prefill
+    for _ in range(4):                                   # pos 4 -> 8
+        plan = sched.plan_step(4, 1)
+        assert plan["sample"] == [0] and not plan["requeued"]
+        sched.record(0, 7)
+    # slot 0's pos=8 needs a 3rd page, pool empty: slot 1 (later index,
+    # prefilling) is preempted -- the loop must skip its vacated entry
+    assert sched.allocator.n_free == 0
+    plan = sched.plan_step(4, 1)
+    assert plan["sample"] == [0] and plan["requeued"] == [1]
+    assert len(plan["freed"]) == 1              # B's admission page reported
+    assert sched.running_slots() == [0]
+    sched.record(0, 7)
+    # the preempted request is back at the queue head, re-admittable
+    assert sched.try_admit_chunked(4) is not None
+
+
+def test_plan_step_partial_chunk_preemption_keeps_fresh_pages_live():
+    """Regression: when a chunk is partially backed before PagesExhausted,
+    the pages allocated for it this step are freed by the preemption and
+    must NOT appear in ``fresh`` -- the engine would scrub free-listed
+    (possibly re-allocated) pages."""
+    sched = Scheduler(n_slots=2, page_size=2, blocks_per_seq=8,
+                      allocator=PageAllocator(5))        # 4 usable pages
+    a = Request(0, np.arange(2, dtype=np.int32), n_new=6)
+    sched.submit(a)
+    assert sched.try_admit_chunked(2) is not None        # 1 page, 3 free
+    plan = sched.plan_step(2, 8)
+    assert plan["sample"] == [0]
+    sched.record_first(0, 5)
+    b = Request(1, np.arange(8, dtype=np.int32), n_new=2)
+    sched.submit(b)
+    assert sched.try_admit_chunked(2) is not None        # 1 page, 2 free
+    plan = sched.plan_step(2, 8)                         # A +1 page, B pos=2
+    assert plan["chunked"] == {1: 2} and sched.allocator.n_free == 1
+    sched.record(0, 7)
+    # B's next chunk spans blocks 1..2: block 1 allocs (pool now empty),
+    # block 2 raises -- B is preempted and the block-1 page freed with it
+    plan = sched.plan_step(4, 8)
+    assert plan["requeued"] == [1]
+    assert plan["fresh"] == []                           # nothing free-listed
+    assert len(plan["freed"]) == 2                       # and both reported
+    assert sched.allocator.n_free == 2                   # B's 2 pages back
+
+
 def test_run_pool_too_small_raises():
     cfg, eng = _engine("internlm2-20b", max_len=32)
     reqs = _requests(cfg.vocab, [(12, 4)])
@@ -239,6 +300,20 @@ def test_run_matches_generate_int8_paged_kv(arch_id):
     cfg, eng = _engine(arch_id, max_len=32, kv_bits=8)
     reqs = _requests(cfg.vocab, MIXED_8[:6], seed=9)
     _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=4)
+
+
+@pytest.mark.slow
+def test_run_matches_generate_bf16_paged_kv():
+    """cache_dtype=bfloat16: dense prefill attends the cache-dtype round
+    trip of the in-flight K/V (the values the chunked path reads back from
+    bf16 pages), so run() == generate() holds for narrow fp caches in both
+    prefill modes, like it does for f32 and int8."""
+    cfg, eng = _engine("internlm2-20b", max_len=32,
+                       cache_dtype=jnp.bfloat16, attn_impl="ref")
+    reqs = _requests(cfg.vocab, MIXED_8[:4], seed=41)
+    for mode in ("chunked", "monolithic"):
+        _assert_run_matches_generate(eng, reqs, page_size=4, max_slots=2,
+                                     prefill=mode)
 
 
 def test_serve_act_bits_threaded_not_dropped():
@@ -463,6 +538,9 @@ def test_stats_ttft_and_prefill_accounting():
         st = res["stats"]
         assert st.mode == mode
         assert sorted(st.ttft_steps) == [0, 1, 2]
+        # shared 1-based convention: the index of the model call whose
+        # logits produced the first token, in both modes
+        assert all(v >= 1 for v in st.ttft_steps.values())
         assert all(v >= 0 for v in st.ttft_s.values())
         fed = (st.chunk_prefill_tokens if mode == "chunked"
                else st.mono_prefill_tokens)
