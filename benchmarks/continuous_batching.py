@@ -12,6 +12,14 @@ Serves a long-prompt + short-decode request mix three ways on one model:
   loop -- prefill chunks and decode tokens share one jit'd ``model_step``
   per iteration, writing K/V straight into block-table pages.
 
+``--speculative`` adds the multi-token-decode comparison
+(docs/speculative.md): ``run(speculative=True)`` at ``draft_k`` in
+{2, 4, 8} (smoke: {2, 4}), each with the full-depth *self-agreeing* draft
+(``draft_layers = n_repeat``: the draft IS the target, acceptance 1.0 --
+the mechanical ceiling) and the default shallow-prefix draft, reporting
+acceptance rate, accepted-tokens/lane-step, and tok/s vs plain chunked
+decode.
+
 Reported per mode: per-request TTFT P50/P99 (wall seconds, including each
 mode's own jit compiles -- the per-length variant explosion *is* the
 monolithic TTFT pathology), aggregate tok/s over the whole run, decode
@@ -26,7 +34,12 @@ Acceptance gates (asserted):
   sensitive throughput gates);
 * chunked jit trace count is independent of the number of distinct prompt
   lengths (at most two ``model_step`` variants -- mixed-step and
-  pure-decode; the batch-1 prefill path is never traced).
+  pure-decode; the batch-1 prefill path is never traced);
+* with ``--speculative``: every speculative stream bit-equals the serial
+  oracle, the self-agreeing draft accepts 100% of its proposals at
+  accepted-tokens/lane-step > 1 (ceiling draft_k + 1: model calls per
+  emitted token drop by that factor), and speculative runs stay within
+  the bounded jit-variant budget (2 model_step + 2 draft_step).
 
 Timing uses the jnp ``ref`` attention backend by default: off-TPU the
 Pallas kernels run in interpret mode, whose per-grid-cell overhead scales
@@ -36,7 +49,8 @@ pallas-vs-ref stream identity is pinned in tests/test_paged_kv.py).
 
 Usage:  PYTHONPATH=src python benchmarks/continuous_batching.py
             [--requests 8] [--n-new 32] [--d-model 128] [--page-size 16]
-            [--chunk CHUNK] [--attn-impl ref|pallas] [--smoke]
+            [--chunk CHUNK] [--attn-impl ref|pallas] [--speculative]
+            [--draft-k K ...] [--smoke]
 """
 from __future__ import annotations
 
@@ -90,6 +104,48 @@ def _report(name: str, st) -> None:
           f"decode {st.decode_tok_per_s:8.1f} tok/s  ({st.steps} steps)")
 
 
+def _speculative_section(model, params, args, reqs, ser_outputs,
+                         plain_st) -> None:
+    """run(speculative=True) sweep + parity / acceptance-ceiling gates."""
+    from repro.serve import ServeEngine
+    ks = args.draft_k or ([2, 4] if args.smoke else [2, 4, 8])
+    n_rep = model.cfg.n_repeat
+    print(f"-- speculative decode (plain chunked decode "
+          f"{plain_st.decode_tok_per_s:.1f} tok/s) --")
+    for k in ks:
+        # self-agree: draft == target, acceptance 1.0 -- the mechanical
+        # ceiling (k+1 tokens per verify); prefix-half: the default
+        # shallow self-draft, the realistic acceptance point
+        for label, kw in (("self-agree", {"draft_layers": n_rep}),
+                          ("prefix-half", {})):
+            eng = ServeEngine(model, params, max_len=args.max_len,
+                              attn_impl=args.attn_impl)
+            res = eng.run(reqs, page_size=args.page_size,
+                          max_slots=args.requests, prefill="chunked",
+                          chunk_tokens=args.chunk, speculative=True,
+                          draft_k=k, **kw)
+            st = res["stats"]
+            print(f"spec k={k} {label:11s}: acc {st.acceptance_rate:5.2f}, "
+                  f"{st.spec_tokens_per_step:5.2f} tok/lane-step, "
+                  f"aggregate {_agg_tok_per_s(st):8.1f} tok/s, decode "
+                  f"{st.decode_tok_per_s:8.1f} tok/s ({st.steps} steps)")
+            for i, (ref, got) in enumerate(zip(ser_outputs, res["outputs"])):
+                np.testing.assert_array_equal(
+                    got, ref, err_msg=f"speculative k={k} {label}: request "
+                                      f"{i} diverged from generate")
+            assert eng.trace_counts["model_step"] <= 2 and \
+                eng.trace_counts["draft_step"] <= 2, dict(eng.trace_counts)
+            if label == "self-agree":
+                assert st.acceptance_rate == 1.0, (
+                    "a draft that IS the target must have every proposal "
+                    "accepted", st.acceptance_rate)
+                assert 1.0 < st.spec_tokens_per_step <= k + 1, (
+                    "accepted-tokens/lane-step must beat plain decode's "
+                    "1.0 and respect the draft_k+1 ceiling",
+                    st.spec_tokens_per_step)
+    print("OK: speculative parity + acceptance-ceiling gates passed")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=8)
@@ -106,6 +162,13 @@ def main() -> None:
                          "per-grid-cell overhead distorts engine wall-clock"
                          " -- kernel-level timing lives in "
                          "benchmarks/attention.py)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="also run speculative multi-token decode at each "
+                         "--draft-k, with parity + acceptance-ceiling gates"
+                         " (docs/speculative.md)")
+    ap.add_argument("--draft-k", type=int, nargs="*", default=None,
+                    help="draft_k values for --speculative (default 2 4 8; "
+                         "smoke: 2 4)")
     ap.add_argument("--smoke", action="store_true",
                     help="small fast run: parity + TTFT + trace gates only "
                          "(CI); skips the timing-sensitive throughput gate")
@@ -197,6 +260,9 @@ def main() -> None:
             warm_chunked.decode_tok_per_s, serial_tps)
     print("OK: parity + TTFT + trace gates passed"
           + ("" if args.smoke else " (+ throughput gates)"))
+    if args.speculative:
+        _speculative_section(model, params, args, reqs, ser_outputs,
+                             chnk_st)
 
 
 if __name__ == "__main__":

@@ -1,9 +1,23 @@
 #!/usr/bin/env python
-"""Docs reachability check: every page in docs/ must be linked (transitively)
-from docs/index.md, and every relative link must resolve to a real file.
+"""Docs hygiene gate: reachability, link targets, anchors, symbol rot.
 
-Run via ``make docs-check``; CI runs it on every push.  Exit status is
-non-zero on orphaned pages or broken links, with one line per finding.
+Four checks over ``docs/`` (run via ``make docs-check``; CI runs it on
+every push), each printing one line per finding and failing the build:
+
+1. **Reachability** -- every page in docs/ must be linked (transitively)
+   from docs/index.md; orphaned pages rot silently.
+2. **Link targets** -- every relative link must resolve to a real file.
+3. **Anchors** -- every intra-docs anchor (``page.md#section`` or
+   ``#section``) must match a heading slug of the target page
+   (GitHub-style slugification), so section cross-references cannot
+   dangle after a heading rename.
+4. **Symbol references** -- every backticked identifier-looking token
+   (``snake_case``, ``CamelCase``, dotted paths like ``ServeEngine.run``)
+   and every backticked file path must still exist in the source tree
+   (grep-based: the token's words must appear in ``src/repro`` /
+   ``tests`` / ``benchmarks`` / ``scripts``).  This is what keeps the
+   module maps and deep dives from describing symbols that were renamed
+   away.
 """
 from __future__ import annotations
 
@@ -11,44 +25,143 @@ import re
 import sys
 from pathlib import Path
 
-DOCS = Path(__file__).resolve().parent.parent / "docs"
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = ROOT / "docs"
 INDEX = DOCS / "index.md"
-# markdown inline links: [text](target); ignores external and anchor links
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)]*)?\)")
+# markdown inline links: [text](target[#anchor])
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]*)(?:#([^)]*))?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$", re.MULTILINE)
+CODE_SPAN_RE = re.compile(r"`([^`\n]+)`")
+# backticked tokens worth checking: identifiers, optionally dotted,
+# optionally with a trailing () -- everything else (flags, shell lines,
+# hyphenated labels, quoted literals) is skipped
+IDENT_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*(?:\.[A-Za-z_][A-Za-z0-9_]*)*"
+                      r"(?:\(\))?$")
+CAMEL_RE = re.compile(r"^(?:[A-Z][a-z0-9]+){2,}$")
+WORD_RE = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+# external namespaces docs legitimately mention; their members are not ours
+EXTERNAL = {"jax", "jnp", "np", "numpy", "lax", "pytest", "hypothesis",
+            "python", "pip", "pallas", "functools", "dataclasses"}
+# directories whose identifiers count as "exists" (docs reference test
+# names and bench flags too, not only src/repro symbols)
+SOURCE_DIRS = ("src/repro", "tests", "benchmarks", "scripts")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub-style heading -> anchor slug."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    text = text.lower()
+    text = re.sub(r"[^a-z0-9 _-]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(page: Path) -> set:
+    out = set()
+    seen: dict = {}
+    for _, heading in HEADING_RE.findall(page.read_text(encoding="utf-8")):
+        slug = github_slug(heading)
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        out.add(slug if n == 0 else f"{slug}-{n}")
+    return out
+
+
+def source_words() -> set:
+    """Every identifier appearing anywhere in the source tree."""
+    words = set()
+    for d in SOURCE_DIRS:
+        for py in (ROOT / d).rglob("*.py"):
+            words.update(WORD_RE.findall(py.read_text(encoding="utf-8")))
+    words.update(WORD_RE.findall((ROOT / "Makefile").read_text()))
+    return words
+
+
+def path_exists(token: str) -> bool:
+    """A backticked path reference must resolve somewhere sensible."""
+    cand = token.rstrip("/")
+    if any((base / cand).exists()
+           for base in (ROOT, ROOT / "src", ROOT / "src" / "repro", DOCS)):
+        return True
+    if "/" not in cand:                # bare filename: search the tree
+        name = Path(cand).name
+        return any(next((ROOT / d).rglob(name), None) is not None
+                   for d in SOURCE_DIRS + ("docs",))
+    return False
+
+
+def check_symbols(page: Path, words: set, problems: list) -> None:
+    text = page.read_text(encoding="utf-8")
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)  # code blocks
+    for token in CODE_SPAN_RE.findall(text):
+        token = token.strip()
+        if "/" in token or token.endswith((".py", ".md", ".ini", ".json",
+                                           ".yml")):
+            if re.fullmatch(r"[\w./-]+", token) and not path_exists(token):
+                problems.append(f"stale path reference in "
+                                f"{page.relative_to(ROOT)}: `{token}`")
+            continue
+        if not IDENT_RE.fullmatch(token):
+            continue                    # flags, shell lines, literals, ...
+        parts = token.removesuffix("()").split(".")
+        if parts[0] in EXTERNAL:
+            continue
+        # only identifier-shaped tokens that plausibly name our symbols:
+        # snake_case, CamelCase, or dotted -- single plain words are prose
+        if len(parts) == 1 and "_" not in token and \
+                not CAMEL_RE.fullmatch(parts[0]):
+            continue
+        missing = [p for p in parts if p not in words]
+        if missing:
+            problems.append(
+                f"stale symbol reference in {page.relative_to(ROOT)}: "
+                f"`{token}` ({', '.join(missing)} not found in "
+                f"{'/'.join(SOURCE_DIRS)})")
 
 
 def links_of(page: Path):
-    for target in LINK_RE.findall(page.read_text(encoding="utf-8")):
+    for target, anchor in LINK_RE.findall(
+            page.read_text(encoding="utf-8")):
         if "://" in target or target.startswith("mailto:"):
             continue
-        yield target, (page.parent / target).resolve()
+        resolved = (page.parent / target).resolve() if target \
+            else page.resolve()
+        yield target, anchor, resolved
 
 
 def main() -> int:
     if not INDEX.is_file():
         print(f"docs-check: missing landing page {INDEX}")
         return 1
-    problems = []
+    problems: list = []
+    words = source_words()
     seen = {INDEX.resolve()}
     frontier = [INDEX]
     while frontier:
         page = frontier.pop()
-        for raw, resolved in links_of(page):
+        check_symbols(page, words, problems)
+        for raw, anchor, resolved in links_of(page):
             if not resolved.exists():
                 problems.append(
-                    f"broken link in {page.relative_to(DOCS.parent)}: "
-                    f"({raw})")
-            elif resolved.suffix == ".md" and resolved not in seen \
+                    f"broken link in {page.relative_to(ROOT)}: ({raw})")
+                continue
+            if anchor and resolved.suffix == ".md":
+                if anchor not in anchors_of(resolved):
+                    problems.append(
+                        f"dangling anchor in {page.relative_to(ROOT)}: "
+                        f"({raw or page.name}#{anchor}) -- no such heading "
+                        f"in {resolved.name}")
+            if resolved.suffix == ".md" and resolved not in seen \
                     and DOCS in resolved.parents:
                 seen.add(resolved)
                 frontier.append(resolved)
     orphans = sorted(p for p in DOCS.rglob("*.md") if p.resolve() not in seen)
     problems += [f"orphaned page (unreachable from docs/index.md): "
-                 f"{p.relative_to(DOCS.parent)}" for p in orphans]
+                 f"{p.relative_to(ROOT)}" for p in orphans]
     for msg in problems:
         print(f"docs-check: {msg}")
     if not problems:
-        print(f"docs-check: OK ({len(seen)} pages reachable from index)")
+        print(f"docs-check: OK ({len(seen)} pages reachable, anchors + "
+              f"symbol references verified)")
     return 1 if problems else 0
 
 

@@ -478,7 +478,8 @@ class LM:
         return tuple(caches)
 
     def init_paged_cache(self, n_slots: int, num_pages: int, page_size: int,
-                         dtype=jnp.bfloat16, kv_bits: Optional[int] = None):
+                         dtype=jnp.bfloat16, kv_bits: Optional[int] = None,
+                         n_repeat: Optional[int] = None):
         """Paged decode cache for the continuous-batching engine.
 
         Per pattern position (stacked over n_repeat like ``init_cache``),
@@ -498,8 +499,17 @@ class LM:
         the same quantizer as the dense cache (``_kv_quant``), so paged
         serving is bit-identical to dense int8 decode; the Pallas decode
         kernel dequantizes the pages in VMEM.
+
+        ``n_repeat`` overrides the stack depth (default ``cfg.n_repeat``):
+        the speculative engine's shallow-prefix *draft* cache stacks only
+        the first ``draft_layers`` repeats (:meth:`draft_prefix_params`),
+        sharing the main stream's block tables.
         """
         cfg = self.cfg
+        R = cfg.n_repeat if n_repeat is None else n_repeat
+        if not 1 <= R <= cfg.n_repeat:
+            raise ValueError(f"n_repeat override {R} outside 1.."
+                             f"{cfg.n_repeat}")
         kv_dt = jnp.int8 if kv_bits == 8 else dtype
 
         def kv_pages():
@@ -533,10 +543,33 @@ class LM:
             else:
                 one = kv_pages()
             stacked = jax.tree.map(
-                lambda a: jnp.broadcast_to(a[None], (cfg.n_repeat,) + a.shape),
-                one)
+                lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), one)
             caches.append(stacked)
         return tuple(caches)
+
+    # -------------------------------------------------- draft-prefix view
+    def draft_prefix_params(self, params, draft_layers: int):
+        """Shallow self-draft view: the first ``draft_layers`` pattern
+        repeats of ``params``, sharing embed/final_norm/unembed.
+
+        The stacked-block layout makes a depth-truncated model a pure
+        *slice*: every leaf of ``params["blocks"]`` carries the repeat
+        stack as its leading axis (including :class:`PackedWeight`
+        children, whose static aux -- bucket membership -- is R-invariant
+        by construction), so ``leaf[:draft_layers]`` is a valid parameter
+        pytree for the same entry points.  ``model_step`` then runs the
+        draft exactly like the target, against a draft cache stacked to
+        the same depth (``init_paged_cache(n_repeat=draft_layers)``).
+        Used by the speculative serving loop (docs/speculative.md); with
+        ``draft_layers == n_repeat`` the draft *is* the target (acceptance
+        1.0 -- the parity-bench sanity ceiling).
+        """
+        if not 1 <= draft_layers <= self.cfg.n_repeat:
+            raise ValueError(
+                f"draft_layers={draft_layers} outside 1..{self.cfg.n_repeat}"
+                f" (cfg.n_repeat)")
+        blocks = jax.tree.map(lambda a: a[:draft_layers], params["blocks"])
+        return {**params, "blocks": blocks}
 
     # ------------------------------------------------------------ prefill
     def prefill(self, params, batch, cache, act_bits=None, attn_impl=None):
@@ -665,15 +698,21 @@ class LM:
 
         tokens / positions: (R, k) int32; slot_map: (R,) int32 row ->
         scheduler slot (selects each row's block-table row); block_tables:
-        (n_slots, nb) int32; logit_cols: (R,) int32 column of each row's
-        last real token -- its hidden state feeds the returned logits
-        (mirror of ``prefill``'s last-token slice; rows without real tokens
-        produce garbage the scheduler ignores).  ``cache`` is an
+        (n_slots, nb) int32; logit_cols: (R,) *or* (R, C) int32 -- the
+        token columns whose hidden states feed the returned logits.  The
+        1-D form is the chunked-prefill contract (each row's last real
+        column, mirror of ``prefill``'s last-token slice; returns
+        ``(R, 1, V)``).  The 2-D form is the speculative-verify
+        generalization: ``C`` columns per row -- a speculating lane reads
+        logits at *every* column of its ``[feedback, draft_1..draft_k]``
+        span (repeat a column to pad; duplicates are free, it is one
+        gather) and the call returns ``(R, C, V)``.  Rows without real
+        tokens produce garbage the scheduler ignores.  ``cache`` is an
         ``init_paged_cache`` tuple whose kinds must all be ``"paged"``:
         recurrent ("state") and cross-attention ("memory") blocks cannot
         chunk and stay on the monolithic prefill path.  act_bits /
-        attn_impl as in :meth:`prefill`.  Returns (logits (R, 1, V),
-        new_cache).
+        attn_impl as in :meth:`prefill`.  Returns (logits (R, C, V) with
+        ``C = 1`` for 1-D ``logit_cols``, new_cache).
         """
         cfg = self.cfg
         kinds = cfg.cache_kinds()
@@ -703,8 +742,11 @@ class LM:
         body, xs = self._with_act_bits(repeat_body, params, cache, act_bits)
         x, new_cache = jax.lax.scan(body, x, xs)
         R, _, d = x.shape
-        idx = jnp.broadcast_to(logit_cols.astype(jnp.int32)[:, None, None],
-                               (R, 1, d))
+        cols = logit_cols.astype(jnp.int32)
+        if cols.ndim == 1:
+            cols = cols[:, None]
+        C = cols.shape[1]
+        idx = jnp.broadcast_to(cols[:, :, None], (R, C, d))
         return self.logits_of(params, jnp.take_along_axis(x, idx, axis=1)), \
             new_cache
 

@@ -19,11 +19,24 @@ Layering (each module is importable on its own):
   jnp-oracle escape hatch), KV pages optionally int8 (``kv_bits=8``), and
   a policy's activation QBNs follow the model into prefill/decode.
 
-See docs/serving.md and docs/attention.md for the architecture walkthrough.
+* :mod:`repro.serve.stats` -- :class:`ServeStats`: the measurable
+  contract (throughput / TTFT / speculation accounting) both execution
+  models fill in.
+
+``run(speculative=True)`` adds multi-token decode: a draft pass (shallow
+self-prefix or low-bit rerun of the same packed weights) proposes
+``draft_k`` tokens per decoding lane, one verify ``model_step`` scores the
+whole span through the paged q-tile kernel, and over-speculated KV pages
+roll back the same step -- token streams stay bit-identical to plain
+``run()`` for any draft.
+
+See docs/serving.md, docs/attention.md and docs/speculative.md for the
+architecture walkthroughs.
 """
-from repro.serve.engine import ServeEngine, ServeStats
+from repro.serve.engine import ServeEngine
 from repro.serve.paged_kv import PageAllocator, PagesExhausted, pages_needed
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.stats import ServeStats
 
 __all__ = ["ServeEngine", "ServeStats", "Request", "Scheduler",
            "PageAllocator", "PagesExhausted", "pages_needed"]

@@ -18,6 +18,12 @@ Two execution models share one weight store and one model:
   prefill-then-decode state machine (batch-1 prefill scattered into the
   pool + ``decode_step_paged``): the only mode for hybrid mamba /
   cross-attention patterns, and the chunked mode's TTFT baseline.
+  ``run(speculative=True)`` adds multi-token decode on top of the chunked
+  loop: a draft pass proposes ``draft_k`` tokens per decoding lane, one
+  verify ``model_step`` scores each lane's whole span as a chunk past its
+  current position, and over-speculated KV pages roll back the same step
+  -- emitted streams stay bit-identical for any draft
+  (docs/speculative.md).
 
 AutoQ integration: the engine deploys a searched :class:`QuantPolicy` at
 weight-load time, with per-layer dispatch between two weight stores:
@@ -67,49 +73,9 @@ from repro.quant.apply import apply_policy_packed, apply_policy_to_params
 from repro.quant.policy import QuantPolicy
 from repro.serve import paged_kv
 from repro.serve.scheduler import Request, Scheduler
+from repro.serve.stats import ServeStats          # re-export (home moved)
 
-
-@dataclasses.dataclass
-class ServeStats:
-    prefill_s: float = 0.0
-    decode_s: float = 0.0
-    tokens_out: int = 0
-    # tokens excluded from the decode rate: first tokens (sampled off prompt
-    # logits) and, in chunked mode, decode tokens riding chunk-carrying
-    # steps (whose time is accounted as prefill)
-    prefill_tokens: int = 0
-    steps: int = 0                  # engine steps (run(): batched steps)
-    n_requests: int = 0
-    mode: str = ""                  # run(): "chunked" | "monolithic"
-    # prompt-token accounting by prefill style (how each prompt token was
-    # pushed through the model): budgeted chunks vs batch-1 monolithic
-    chunk_prefill_tokens: int = 0
-    mono_prefill_tokens: int = 0
-    # per-request time-to-first-token, keyed by request id: the 1-based
-    # index of the model call whose logits produced the first token
-    # (chunked: the step that completed the prompt; monolithic: the
-    # admission prefill, counted as if it were the next step -- same
-    # convention, so step-based TTFT compares across modes), and
-    # wall-clock seconds since run() started
-    ttft_steps: Dict[int, int] = dataclasses.field(default_factory=dict)
-    ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
-    requeues: int = 0               # chunked: prefills preempted + requeued
-    reclaimed_pages: int = 0        # out-of-window pages returned mid-run
-    peak_pages: int = 0             # high-water mark of pool pages in use
-
-    @property
-    def decode_tok_per_s(self) -> float:
-        # tokens and time of prefill / chunk-carrying steps are excluded on
-        # both sides, so this is the steady-state decode-batch rate
-        return ((self.tokens_out - self.prefill_tokens) / self.decode_s
-                if self.decode_s else 0.0)
-
-    def ttft_percentiles(self, qs=(50, 99)) -> Dict[int, float]:
-        """Percentiles of per-request TTFT seconds (empty dict if unset)."""
-        if not self.ttft_s:
-            return {}
-        vals = np.asarray(sorted(self.ttft_s.values()))
-        return {q: float(np.percentile(vals, q)) for q in qs}
+__all__ = ["ServeEngine", "ServeStats"]
 
 
 class ServeEngine:
@@ -182,6 +148,10 @@ class ServeEngine:
             static_argnames=("attn_impl",))
         self._model_step = jax.jit(counted("model_step", model.model_step),
                                    static_argnames=("attn_impl",))
+        # the speculative draft pass runs the same unified step under its
+        # own trace counter, so variant boundedness is auditable per role
+        self._draft_step = jax.jit(counted("draft_step", model.model_step),
+                                   static_argnames=("attn_impl",))
 
     def weight_hbm_bytes(self) -> Dict[str, int]:
         """Stored weight bytes by leaf kind.
@@ -249,7 +219,10 @@ class ServeEngine:
             *, page_size: int = 16, max_slots: int = 8,
             num_pages: Optional[int] = None, prefill: Optional[str] = None,
             chunk_tokens: Optional[int] = None,
-            token_budget: Optional[int] = None) -> Dict[str, Any]:
+            token_budget: Optional[int] = None, speculative: bool = False,
+            draft_k: int = 4, draft_policy: str = "prefix",
+            draft_layers: Optional[int] = None,
+            draft_act_bits: Optional[float] = None) -> Dict[str, Any]:
         """Serve a workload of mixed-length requests with continuous batching.
 
         requests: each a :class:`Request`, a ``{"tokens", "n_new",
@@ -279,7 +252,31 @@ class ServeEngine:
         ``prefill=None`` auto-selects chunked where supported.
         chunk_tokens defaults to ``page_size``; token_budget to
         ``max_slots + chunk_tokens - 1`` (every decode lane plus one full
-        chunk) and must be >= max_slots so decode lanes are never starved.
+        chunk; with ``speculative=True``, ``max_slots * (draft_k + 1) +
+        chunk_tokens - 1`` so full verify spans fit) and must be >=
+        max_slots so decode lanes are never starved.
+
+        ``speculative=True`` turns on multi-token decode
+        (docs/speculative.md): each step a *draft* proposes up to
+        ``draft_k`` tokens per decoding lane, one jit'd verify
+        ``model_step`` runs every lane's ``[feedback, draft_1..draft_k]``
+        span as a chunk past its current position (the same q-tile path
+        chunked prefill uses), and the sampler keeps the longest
+        draft/sample agreement prefix plus the corrected token --
+        over-speculated KV pages roll back the same step.  Acceptance
+        changes *throughput only*: token streams are bit-identical to a
+        non-speculative ``run()`` for any draft, greedy and sampled alike
+        (each emitted token comes from the same logits + rng split plain
+        decode would use).  ``draft_policy="prefix"`` self-drafts with the
+        first ``draft_layers`` (default ``n_repeat // 2``) repeats of this
+        very model; ``"lowbit"`` re-runs the full model as the AutoQ-native
+        cheap proxy -- ``draft_act_bits`` activation QBNs (default 4.0)
+        and an int8-KV draft cache.  Each knob belongs to one policy and
+        is rejected with the other: ``draft_layers`` is ``"prefix"``-only,
+        ``draft_act_bits`` is ``"lowbit"``-only.
+        Requires chunked prefill: hybrid (mamba / cross-attn) patterns
+        raise, like forcing ``prefill="chunked"`` does -- serve them
+        non-speculatively through ``prefill="monolithic"``.
 
         page_size: KV positions per page.  max_slots: decode-batch width
         (compiled shape).  num_pages: pool size; default sizes for the
@@ -318,6 +315,32 @@ class ServeEngine:
                 f"prefill='chunked' needs all-paged cache kinds, got "
                 f"{kinds}: recurrent/memory blocks cannot chunk -- use "
                 "prefill='monolithic'")
+        if speculative:
+            # fail fast, before any model call: running the verify chunk
+            # against recurrent state would silently corrupt it
+            if not chunkable:
+                raise ValueError(
+                    f"speculative=True needs all-paged cache kinds, got "
+                    f"{kinds}: recurrent/memory blocks cannot run the "
+                    "multi-token verify chunk -- serve hybrid patterns "
+                    "non-speculatively through prefill='monolithic'")
+            if prefill == "monolithic":
+                raise ValueError(
+                    "speculative=True runs through the chunked model_step "
+                    "loop; prefill='monolithic' cannot carry verify spans "
+                    "-- drop speculative=True or use prefill='chunked'")
+            if draft_k < 1:
+                raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+            if draft_policy not in ("prefix", "lowbit"):
+                raise ValueError(f"unknown draft_policy {draft_policy!r}; "
+                                 "expected 'prefix' or 'lowbit'")
+            if draft_layers is not None and draft_policy != "prefix":
+                raise ValueError("draft_layers applies to "
+                                 "draft_policy='prefix' only")
+            if draft_act_bits is not None and draft_policy != "lowbit":
+                raise ValueError("draft_act_bits applies to "
+                                 "draft_policy='lowbit' only (the prefix "
+                                 "draft serves the target's own act QBNs)")
         blocks_per_seq = paged_kv.pages_needed(self.max_len, page_size)
         if num_pages is None:
             num_pages = max_slots * blocks_per_seq + 1      # +1: trash page
@@ -342,8 +365,13 @@ class ServeEngine:
                 page_size, reclaim)
         if prefill == "chunked":
             chunk = chunk_tokens if chunk_tokens is not None else page_size
-            budget = token_budget if token_budget is not None \
-                else max_slots + chunk - 1
+            if token_budget is not None:
+                budget = token_budget
+            elif speculative:
+                # room for every lane's full verify span plus one chunk
+                budget = max_slots * (draft_k + 1) + chunk - 1
+            else:
+                budget = max_slots + chunk - 1
             if chunk < 1:
                 raise ValueError(f"chunk_tokens must be >= 1, got {chunk}")
             if budget < max_slots:
@@ -351,7 +379,10 @@ class ServeEngine:
                     f"token_budget={budget} < max_slots={max_slots}: every "
                     "decode lane needs a token each step (decode is never "
                     "deferred); raise the budget or shrink the batch")
-            self._run_chunked(*args, chunk=chunk, budget=budget)
+            spec = self._make_draft(
+                max_slots, num_pages, page_size, draft_k, draft_policy,
+                draft_layers, draft_act_bits) if speculative else None
+            self._run_chunked(*args, chunk=chunk, budget=budget, spec=spec)
         else:
             self._run_monolithic(*args)
         return {"outputs": [np.asarray(outputs[r.rid], np.int32)
@@ -359,9 +390,18 @@ class ServeEngine:
                 "stats": stats}
 
     def _run_chunked(self, reqs, sched, cache, kinds, outputs, rngs, stats,
-                     num_pages, page_size, reclaim, *, chunk, budget):
-        """The unified token-budget step loop (prefill == decode)."""
+                     num_pages, page_size, reclaim, *, chunk, budget,
+                     spec=None):
+        """The unified token-budget step loop (prefill == decode).
+
+        ``spec`` (from :meth:`_make_draft`) arms speculative multi-token
+        decode: each step runs the draft pass (:meth:`_draft_propose`),
+        one verify ``model_step`` over every lane's span, then the
+        accept/rollback bookkeeping.  ``spec=None`` is the plain loop.
+        """
         t_run = time.time()
+        k = spec["k"] if spec else 0
+        W = max(chunk, k + 1) if spec else chunk
         while sched.has_work:
             if reclaim is not None:
                 stats.reclaimed_pages += len(
@@ -376,7 +416,7 @@ class ServeEngine:
                     f"{num_pages} pages (page_size={page_size}) is too "
                     "small for its first chunk + decode headroom")
             t0 = time.time()
-            plan = sched.plan_step(chunk, budget)
+            plan = sched.plan_step(chunk, budget, draft_k=k)
             stats.requeues += len(plan["requeued"])
             # a request admitted above may have been preempted inside this
             # very plan_step: its admission pages are back on the free list
@@ -386,50 +426,215 @@ class ServeEngine:
             fresh = [p for p in fresh if p not in drop]
             # scrub unconditionally: admission pages must be sentinel-clean
             # before any later step writes chunks into them, even if this
-            # step is abandoned below
+            # step is abandoned below.  The draft cache shares the block
+            # tables, so it scrubs the same pages.
             cache = paged_kv.scrub_pages(cache, kinds, fresh + plan["fresh"])
+            if spec:
+                spec["cache"] = paged_kv.scrub_pages(
+                    spec["cache"], kinds, fresh + plan["fresh"])
             if not plan["sample"] and not plan["chunked"]:
                 continue            # every planned slot was preempted
-            # pure-decode steps run the (R, 1) column slice -- the second
-            # (and last) compiled variant; a (R, chunk) step would burn
-            # chunk-1 masked lanes per slot once every prompt is in.  jit
-            # variants stay 2 per (max_slots, chunk, pool shape), still
-            # independent of prompt lengths.
-            w = chunk if plan["chunked"] else 1
+            # pure-decode steps run the (R, 1) column slice -- a full-width
+            # step would burn masked lanes per slot once every prompt is
+            # in.  jit variants stay bounded per (max_slots, chunk, pool
+            # shape[, draft_k]): mixed/verify width + pure-decode width,
+            # still independent of prompt lengths.
+            spec_lanes = {i: c for i, c in plan["spec"].items() if c > 1}
+            w = W if (plan["chunked"] or spec_lanes) else 1
+            tokens = plan["tokens"]
+            if spec and (plan["chunked"] or plan["spec"]):
+                # draft pass: mirrors prompt chunks into the draft cache,
+                # feeds every decode lane's feedback token (even on steps
+                # where page pressure degraded all spans to width 1 --
+                # skipping those would leave draft-cache holes the 1-token
+                # catch-up can never repair, permanently hurting
+                # acceptance), and proposes each speculating lane's draft
+                # tokens, which fill the placeholder verify columns
+                drafts = self._draft_propose(spec, plan, sched, spec_lanes,
+                                             W if plan["chunked"] else 2)
+                for i, cols in spec_lanes.items():
+                    tokens[i, 1:cols] = drafts[i][:cols - 1]
             logits, cache = self._model_step(
-                self.params, jnp.asarray(plan["tokens"][:, :w]),
+                self.params, jnp.asarray(tokens[:, :w]),
                 jnp.asarray(plan["positions"][:, :w]),
                 jnp.asarray(plan["slot_map"]), cache,
                 jnp.asarray(sched.tables.as_array()),
                 jnp.asarray(plan["logit_cols"]),
                 self.act_bits, attn_impl=self.attn_impl)
-            rows = np.asarray(logits[:, -1])
+            rows = np.asarray(logits)             # (R, C, V); C=1 plain
             stats.chunk_prefill_tokens += sum(plan["chunked"].values())
+            emitted_step = 0
             for i in plan["sample"]:
                 s = sched.slot(i)
                 req = s.req
-                tok = self._next_token(req, rngs, rows[i:i + 1])
-                outputs[req.rid].append(tok)
-                stats.tokens_out += 1
                 if not s.out:                     # the request's first token
+                    tok = self._next_token(req, rngs, rows[i, -1:])
+                    outputs[req.rid].append(tok)
+                    stats.tokens_out += 1
+                    emitted_step += 1
                     stats.ttft_steps[req.rid] = stats.steps + 1
                     stats.ttft_s[req.rid] = time.time() - t_run
                     sched.record_first(i, tok)
-                else:
-                    sched.record(i, tok)
+                    continue
+                # decode lane: walk the verify span, keeping the longest
+                # draft/sample agreement prefix + the corrected token.
+                # Every emitted token comes from the same logits row + rng
+                # split plain decode would produce (rejected columns never
+                # consume rng), so acceptance changes speed, never output.
+                cols = plan["spec"].get(i, 1)
+                emitted = []
+                for j in range(cols):
+                    tok = self._next_token(req, rngs, rows[i, j:j + 1])
+                    emitted.append(tok)
+                    if j + 1 >= cols or tokens[i, j + 1] != tok:
+                        break
+                if cols > 1:
+                    stats.record_acceptance(req.rid, cols - 1,
+                                            len(emitted) - 1)
+                done = False
+                for tok in emitted:
+                    outputs[req.rid].append(tok)
+                    stats.tokens_out += 1
+                    done = sched.record(i, tok)
+                emitted_step += len(emitted)
+                if done:
+                    if spec:                      # slot may be re-admitted
+                        spec["frontier"].pop(i, None)
+                elif cols > 1:
+                    # pages past the acceptance point backed only rejected
+                    # draft positions: return them now (finished lanes
+                    # released everything inside record()); the draft
+                    # write cursor clamps back too -- draft KV past the
+                    # acceptance point is rejected-token garbage the
+                    # stream overwrites in place
+                    sched.rollback_speculation(i)
+                    if spec:
+                        f = spec["frontier"]
+                        f[i] = min(f.get(i, s.pos), s.pos)
+            if spec_lanes:
+                stats.spec_steps += 1
             dt = time.time() - t0
             # chunk-carrying steps are prefill-side: their time AND their
             # sampled tokens (first tokens plus any decode lanes riding the
             # step) leave the decode rate, so decode_tok_per_s measures the
-            # steady-state (R, 1) decode batch -- comparable across modes
+            # steady-state decode batch -- comparable across modes
             if plan["chunked"]:
                 stats.prefill_s += dt
-                stats.prefill_tokens += len(plan["sample"])
+                stats.prefill_tokens += emitted_step
             else:
                 stats.decode_s += dt
             stats.steps += 1
             stats.peak_pages = max(stats.peak_pages,
                                    num_pages - 1 - sched.allocator.n_free)
+
+    # ------------------------------------------------- speculative drafting
+    def _make_draft(self, max_slots, num_pages, page_size, draft_k,
+                    draft_policy, draft_layers, draft_act_bits):
+        """Build the draft pass state for one speculative ``run()``.
+
+        The draft is *another view of the same engine*: it proposes tokens
+        through the very ``model_step`` the target verifies with, against
+        its own paged cache that shares the main stream's block tables
+        (same positions, same page ids -- rollback and scrub cover both).
+
+        * ``"prefix"``: the first ``draft_layers`` stacked repeats of the
+          served params (``LM.draft_prefix_params``) -- no extra weights,
+          cache stacked to the prefix depth.  ``draft_layers == n_repeat``
+          makes the draft the target (acceptance 1.0, the bench ceiling).
+        * ``"lowbit"``: the full model as its own cheap proxy, AutoQ
+          style -- ``draft_act_bits`` activation QBNs everywhere and an
+          int8-KV draft cache, so the draft pays low-bit compute/traffic
+          for the same depth.
+        """
+        model, cfg = self.model, self.model.cfg
+        if draft_policy == "prefix":
+            d = draft_layers if draft_layers is not None \
+                else max(1, cfg.n_repeat // 2)
+            params = model.draft_prefix_params(self.params, d)
+            act = None if self.act_bits is None else self.act_bits[:d]
+            dcache = model.init_paged_cache(
+                max_slots, num_pages, page_size, dtype=self.cache_dtype,
+                kv_bits=self.kv_bits, n_repeat=d)
+        else:                                     # "lowbit"
+            params = self.params
+            act = jnp.full((cfg.n_repeat, len(cfg.pattern)),
+                           4.0 if draft_act_bits is None
+                           else float(draft_act_bits), jnp.float32)
+            dcache = model.init_paged_cache(
+                max_slots, num_pages, page_size, dtype=self.cache_dtype,
+                kv_bits=8)
+        return {"params": params, "cache": dcache, "act": act, "k": draft_k,
+                "frontier": {}}
+
+    def _draft_propose(self, spec, plan, sched, spec_lanes, w1):
+        """Run the draft pass for one step; returns slot -> draft tokens.
+
+        Call 1 carries three kinds of rows: prompt-chunk rows keep the
+        draft cache's prompt KV warm (without this, chunks fed while no
+        lane was speculating would leave holes and crater acceptance);
+        every decode row feeds its feedback token, *preceded by a one-token
+        catch-up when the previous verify step accepted its whole span*
+        (the last draft was proposed but never fed back, so the draft
+        cache trails the stream by one position -- ``spec["frontier"]``
+        tracks each lane's draft write cursor; after a rejection the
+        frontier clamps back, because everything past the acceptance
+        point is rejected-token KV that the stream overwrites in place);
+        and each speculating row's last-real-column logits propose its
+        first draft token.  Calls 2..span-1 are (R, 1) steps feeding each
+        lane's previous proposal at the next position -- exactly the
+        autoregressive loop the verify step collapses.  Draft proposals
+        are greedy by design: the draft is a guess, the verify sampler is
+        the ground truth.  ``w1`` is call 1's width (the chunk width, or
+        2 on chunkless steps -- feedback plus the catch-up column), so
+        the draft compiles two bounded shapes, like the main loop."""
+        n = plan["tokens"].shape[0]
+        tables = jnp.asarray(sched.tables.as_array())
+        slot_map = jnp.asarray(plan["slot_map"])
+        frontier = spec.setdefault("frontier", {})
+        dtok = np.zeros((n, w1), np.int32)
+        dpos = np.full((n, w1), paged_kv.POS_SENTINEL, np.int32)
+        lcols = np.zeros((n,), np.int32)
+        for i, c in plan["chunked"].items():      # mirror prompt chunks
+            dtok[i, :c] = plan["tokens"][i, :c]
+            dpos[i, :c] = plan["positions"][i, :c]
+            lcols[i] = c - 1
+        for i in plan["spec"]:                    # decode rows (any span)
+            s = sched.slot(i)
+            catch = min(s.pos - frontier.get(i, s.pos), 1)
+            if catch:                             # re-feed the accepted
+                dtok[i, 0] = s.out[s.pos - 1 - s.req.prompt_len]
+                dpos[i, 0] = s.pos - 1            # last draft of last span
+            dtok[i, catch] = s.out[-1]
+            dpos[i, catch] = s.pos
+            lcols[i] = catch
+        logits, spec["cache"] = self._draft_step(
+            spec["params"], jnp.asarray(dtok), jnp.asarray(dpos), slot_map,
+            spec["cache"], tables, jnp.asarray(lcols), spec["act"],
+            attn_impl=self.attn_impl)
+        prop = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+        drafts = {i: [prop[i]] for i in spec_lanes}
+        max_cols = max(spec_lanes.values(), default=1)
+        zeros = jnp.zeros((n,), jnp.int32)
+        for m in range(1, max_cols - 1):          # propose d_{m+1}
+            # width 2 (second column sentinel) so proposal calls share the
+            # chunkless call-1 variant: two draft shapes total
+            ctok = np.zeros((n, 2), np.int32)
+            cpos = np.full((n, 2), paged_kv.POS_SENTINEL, np.int32)
+            for i, cols in spec_lanes.items():
+                if cols >= m + 2:                 # lane still drafting
+                    ctok[i, 0] = drafts[i][m - 1]
+                    cpos[i, 0] = sched.slot(i).pos + m
+            logits, spec["cache"] = self._draft_step(
+                spec["params"], jnp.asarray(ctok), jnp.asarray(cpos),
+                slot_map, spec["cache"], tables, zeros, spec["act"],
+                attn_impl=self.attn_impl)
+            prop = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
+            for i, cols in spec_lanes.items():
+                if cols >= m + 2:
+                    drafts[i].append(prop[i])
+        for i, cols in plan["spec"].items():      # draft write cursors
+            frontier[i] = sched.slot(i).pos + max(cols - 1, 1)
+        return {i: np.asarray(d, np.int32) for i, d in drafts.items()}
 
     def _run_monolithic(self, reqs, sched, cache, kinds, outputs, rngs,
                         stats, num_pages, page_size, reclaim):

@@ -149,6 +149,35 @@ class BlockTables:
                 self._table[slot, b] = TRASH_PAGE
         return freed
 
+    def truncate_to(self, slot: int, n_blocks: int) -> List[int]:
+        """Unmap logical blocks ``>= n_blocks`` of ``slot``; return their
+        still-held physical pages (caller frees them).
+
+        Speculative-decode rollback: a verify step grows pages out to the
+        full draft span up front; after acceptance lands at position
+        ``pos``, the scheduler truncates the table back to
+        ``pages_needed(pos, page_size)`` blocks -- exactly the blocks
+        plain decode would hold at that position -- so over-speculated
+        pages return to the pool the same step they were rejected.  The
+        tail is the mirror of :meth:`free_prefix`'s head: dropped entries
+        shrink the held list (growth re-appends from ``n_blocks``), while
+        any reclaimed ``TRASH_PAGE`` placeholders inside the kept prefix
+        stay put.  The truncated table entries go back to ``TRASH_PAGE``,
+        so gathers of the rolled-back range read the all-sentinel trash
+        page; K/V bytes of *kept* pages past ``pos`` are left as-is --
+        they carry positions ``> pos`` that the causal mask rejects until
+        the stream overwrites them (the rollback invariant,
+        docs/speculative.md).
+        """
+        held = self._held[slot]
+        if n_blocks < 0:
+            raise ValueError(f"n_blocks must be >= 0, got {n_blocks}")
+        freed = [p for p in held[n_blocks:] if p != TRASH_PAGE]
+        for b in range(n_blocks, len(held)):
+            self._table[slot, b] = TRASH_PAGE
+        del held[n_blocks:]
+        return freed
+
     def release(self, slot: int) -> List[int]:
         """Unmap and return the slot's pages (caller frees them; reclaimed
         placeholder blocks are skipped -- their pages were freed already)."""

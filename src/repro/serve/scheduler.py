@@ -10,9 +10,12 @@ to drain.  Two admission styles share the slot table:
   default): a request is admitted when its *first prompt chunk* fits, and
   the prompt is fed chunk by chunk through the engine's unified
   ``model_step`` under a per-step token budget -- decode lanes take 1
-  token each first, the remainder funds prompt chunks.  A prefilling
-  sequence whose pages cannot grow is preempted and *requeued* (it has
-  emitted nothing, so a restart replays the identical stream).
+  token each first (or a ``draft_k + 1``-column *speculative verify span*
+  when the engine runs multi-token decode; over-speculated tail pages are
+  returned post-step by :meth:`rollback_speculation`), the remainder funds
+  prompt chunks.  A prefilling sequence whose pages cannot grow is
+  preempted and *requeued* (it has emitted nothing, so a restart replays
+  the identical stream).
 * **monolithic** (:meth:`try_admit` + :meth:`batch`): the legacy path --
   the whole prompt's pages up front, one batch-1 prefill per request
   (hybrid mamba/cross-attn patterns only chunk this way).
@@ -201,64 +204,152 @@ class Scheduler:
         self._admit_seq += 1
         return req, free_slot, pages
 
-    def plan_step(self, chunk: int, token_budget: int) -> Dict[str, object]:
-        """Build one fixed-shape ``(n_slots, chunk)`` token-budget batch.
+    def plan_step(self, chunk: int, token_budget: int,
+                  draft_k: int = 0) -> Dict[str, object]:
+        """Build one fixed-shape token-budget batch (the *step plan*).
 
-        Every decode-ready slot contributes its 1 feedback token first
-        (decode is never starved); the remaining budget funds prompt-chunk
-        tokens for prefilling slots in slot order, up to ``chunk`` per slot
-        per step (partial chunks are fine -- padded columns carry sentinel
-        positions).  Newly needed pages are allocated here; if a *chunk*
-        cannot be backed, the youngest prefilling slot is requeued (pages
-        freed, request back at the queue head -- it has emitted nothing, so
-        a later restart reproduces its stream) rather than failing the
-        whole workload; if a *decode* token cannot be backed, prefilling
-        slots are requeued to free pages first and only then does
+        Every decode-ready slot contributes its feedback token first
+        (decode is never starved); with ``draft_k > 0`` each decode lane is
+        additionally planned as a **speculative span** of up to
+        ``draft_k + 1`` verify columns (feedback + ``draft_k`` draft
+        tokens, capped at the request's remaining ``n_new`` and charged in
+        full against the budget -- a lane the budget or the pool cannot
+        back degrades toward plain 1-token decode, never below it).  The
+        remaining budget funds prompt-chunk tokens for prefilling slots in
+        slot order, up to ``chunk`` per slot per step (partial chunks are
+        fine -- padded columns carry sentinel positions).  Newly needed
+        pages are allocated here; if a *chunk* cannot be backed, the
+        youngest prefilling slot is requeued (pages freed, request back at
+        the queue head -- it has emitted nothing, so a later restart
+        reproduces its stream) rather than failing the whole workload; if
+        a *decode* token cannot be backed, prefilling slots are requeued
+        to free pages first and only then does
         :class:`~.paged_kv.PagesExhausted` propagate (nothing left to
         preempt: the pool is smaller than the running set's worst case).
+        Draft columns past the first never preempt anyone -- speculation
+        is best-effort, and its tail pages are returned post-step by
+        :meth:`rollback_speculation`.
 
-        Returns ``{"tokens", "positions", "slot_map", "logit_cols"``
-        (device-ready arrays)``, "sample"`` (slots emitting a token this
-        step; a prefilling slot appears exactly when this step's chunk
-        reaches its prompt end)``, "chunked"`` (slot -> chunk tokens fed)
-        ``, "fresh"`` (pages to scrub)``, "requeued"`` (request ids sent
-        back to the queue)``, "freed"`` (pages free-listed by preemptions
-        this step -- the engine must drop any stale aliases of them, e.g.
-        admission pages, from its own scrub set)``}``.
+        Returns the **plan dict** -- the engine<->scheduler step contract
+        (pinned in docs/serving.md; every key, every step, both consumers):
+
+        ``"tokens"``, ``"positions"`` : (n_slots, W) int32 device-ready
+            arrays, ``W = chunk`` (or ``max(chunk, draft_k + 1)`` when
+            speculating).  Real tokens left-aligned per row; padding
+            carries ``POS_SENTINEL`` positions.  Draft columns (1..span-1
+            of a speculating row) are *placeholders* the engine fills
+            after the draft pass -- the plan fixes their positions only.
+        ``"slot_map"`` : (n_slots,) int32 row -> scheduler slot (identity
+            here; the contract allows compaction).
+        ``"logit_cols"`` : (n_slots,) int32 -- each row's last real
+            column, whose logits the sampler reads; with ``draft_k > 0``
+            shaped (n_slots, draft_k + 1), one column per verify position
+            (padded by repeating the last) -- ``model_step``'s 2-D form.
+        ``"sample"`` : slots emitting >= 1 token this step -- every decode
+            lane, plus each prefilling slot whose chunk reaches its prompt
+            end this step (its first token; TTFT).
+        ``"spec"`` : slot -> planned verify-span width (1..draft_k+1) for
+            decode lanes when ``draft_k > 0``, else ``{}``.  Width 1 means
+            the lane degraded to plain decode (no draft pass for it).
+        ``"chunked"`` : slot -> prompt-chunk tokens fed this step (the
+            step is *chunk-carrying* iff non-empty: its wall time and
+            sampled tokens are accounted prefill-side).
+        ``"fresh"`` : pages allocated this step, still owned by a live
+            slot -- the engine must scrub them (sentinel ``pos``) before
+            the model call touches the pool.
+        ``"freed"`` : pages free-listed by preemptions this step -- the
+            engine must drop stale aliases of them (e.g. this step's
+            admission pages) from its own scrub set; they may already be
+            re-allocated under a new owner in ``"fresh"``.
+        ``"requeued"`` : request ids sent back to the queue head (their
+            slots vacated; FIFO order preserved).
         """
         n = self.n_slots
-        tokens = np.zeros((n, chunk), np.int32)
-        positions = np.full((n, chunk), POS_SENTINEL, np.int32)
-        logit_cols = np.zeros((n,), np.int32)
+        W = chunk if draft_k == 0 else max(chunk, draft_k + 1)
+        tokens = np.zeros((n, W), np.int32)
+        positions = np.full((n, W), POS_SENTINEL, np.int32)
+        logit_cols = np.zeros((n,) if draft_k == 0 else (n, draft_k + 1),
+                              np.int32)
         sample: List[int] = []
         fresh: List[int] = []
         freed: List[int] = []
         preempted: List[_Slot] = []
         chunked: Dict[int, int] = {}
+        spec: Dict[int, int] = {}
         budget = token_budget
 
-        # index over a snapshot, re-check liveness: preempting a prefilling
-        # slot to back a decode lane vacates entries this loop has not yet
-        # reached
-        for i in self.running_slots():           # decode lanes first
+        # decode lanes are never preempted, so this snapshot is stable even
+        # while prefilling slots are being vacated to back them
+        decode_lanes = [i for i in self.running_slots()
+                        if not self._slots[i].prefilling]
+        lane_cols: Dict[int, int] = {}
+        # draft-tail pages granted this step, per lane: (first col using
+        # the page, page id) -- the shed pool for mandatory allocations
+        lane_tail: Dict[int, List[Tuple[int, int]]] = {}
+
+        def shed_draft_page() -> bool:
+            """Give back the newest draft-tail page of the widest planned
+            span: speculation is best-effort, a feedback token is not.
+            Plain decode must never fail where it would have succeeded
+            without speculation."""
+            cand = [(c, i) for i, c in lane_cols.items() if lane_tail.get(i)]
+            if not cand:
+                return False
+            _, i = max(cand)
+            j, page = lane_tail[i].pop()
+            trunc = self.tables.truncate_to(i, self.tables.n_blocks(i) - 1)
+            assert trunc == [page], (trunc, page)
+            fresh.remove(page)
+            self.allocator.free([page])
+            lane_cols[i] = j          # span now ends where that block began
+            return True
+
+        for d_idx, i in enumerate(decode_lanes):  # decode lanes first
             s = self._slots[i]
-            if not isinstance(s, _Slot) or s.prefilling:
-                continue
-            while True:
-                try:
-                    fresh += self._ensure_block(i, s.pos)
-                    break
-                except PagesExhausted:
-                    victim = self._youngest_prefilling()
-                    if victim is None:
-                        raise
-                    v, pages = self._preempt(victim)
-                    preempted.append(v)
-                    freed += pages
+            remaining = s.req.n_new - len(s.out)
+            later = len(decode_lanes) - d_idx - 1   # their 1-token floor
+            span = 1 if draft_k == 0 else \
+                max(1, min(draft_k + 1, remaining, budget - later))
+            cols = 0
+            for j in range(span):
+                if j == 0:
+                    # the feedback token is mandatory: preempt prefilling
+                    # slots, then shed other lanes' draft tails, or raise
+                    while True:
+                        try:
+                            fresh += self._ensure_block(i, s.pos)
+                            break
+                        except PagesExhausted:
+                            victim = self._youngest_prefilling()
+                            if victim is not None:
+                                v, pages = self._preempt(victim)
+                                preempted.append(v)
+                                freed += pages
+                            elif not shed_draft_page():
+                                raise
+                else:
+                    try:                  # draft columns are best-effort
+                        got = self._ensure_block(i, s.pos + j)
+                    except PagesExhausted:
+                        break             # degrade the span, keep the lane
+                    fresh += got
+                    if got:
+                        lane_tail.setdefault(i, []).append((j, got[0]))
+                cols += 1
+            lane_cols[i] = cols
+            budget -= cols
+        # array fill second: a lane's span may have shrunk after its pass
+        # (shed_draft_page), so widths are only final here
+        for i in decode_lanes:
+            s = self._slots[i]
+            cols = lane_cols[i]
             tokens[i, 0] = s.out[-1]
-            positions[i, 0] = s.pos
+            positions[i, :cols] = np.arange(s.pos, s.pos + cols,
+                                            dtype=np.int32)
+            if draft_k > 0:
+                logit_cols[i] = np.minimum(np.arange(draft_k + 1), cols - 1)
+                spec[i] = cols
             sample.append(i)
-            budget -= 1
 
         for i in self.running_slots():           # then prompt chunks
             s = self._slots[i]
@@ -289,7 +380,7 @@ class Scheduler:
             s.pos += c
             budget -= c
             if not s.prefilling:                 # chunk reached prompt end
-                logit_cols[i] = c - 1
+                logit_cols[i] = c - 1            # 2-D: whole row (one col)
                 sample.append(i)
         # re-insert preempted requests youngest-admission first, so the
         # oldest ends up at the queue front: FIFO order survives even a
@@ -298,7 +389,7 @@ class Scheduler:
             self._queue.appendleft(s.req)
         return {"tokens": tokens, "positions": positions,
                 "slot_map": np.arange(n, dtype=np.int32),
-                "logit_cols": logit_cols, "sample": sample,
+                "logit_cols": logit_cols, "sample": sample, "spec": spec,
                 "chunked": chunked, "fresh": fresh, "freed": freed,
                 "requeued": [s.req.rid for s in preempted]}
 
@@ -314,6 +405,27 @@ class Scheduler:
             self._release(slot)
             return True
         return False
+
+    def rollback_speculation(self, slot: int) -> List[int]:
+        """Return a lane's over-speculated tail pages to the pool.
+
+        Called by the engine after a verify step's acceptance landed and
+        :meth:`record` advanced the cursor: blocks past
+        ``pages_needed(pos, page_size)`` backed only rejected draft
+        positions, so the table is truncated
+        (:meth:`~.paged_kv.BlockTables.truncate_to`) and their pages
+        freed.  Post-rollback occupancy is *exactly* what plain decode
+        would hold at the same position -- the no-leak invariant the
+        speculative property suite pins (tests/test_speculative.py).
+        Stale K/V inside kept pages needs no scrub: its positions exceed
+        the cursor, so the causal mask rejects it until the stream
+        overwrites it in place.  Returns the freed pages."""
+        s = self.slot(slot)
+        freed = self.tables.truncate_to(
+            slot, pages_needed(s.pos, self.page_size))
+        if freed:
+            self.allocator.free(freed)
+        return freed
 
     def _ensure_block(self, slot: int, pos: int) -> List[int]:
         """Back write position ``pos`` of ``slot`` with a page (may alloc)."""

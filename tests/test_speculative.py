@@ -1,0 +1,376 @@
+"""Speculative multi-token decode: accept/rollback properties + parity.
+
+The acceptance contract (docs/speculative.md): ``run(speculative=True)``
+emits token streams **bit-identical** to a non-speculative ``run()`` /
+independent ``generate()`` calls, for *any* draft -- acceptance changes
+speed, never output -- and a verify step's over-speculated KV pages roll
+back the same step, leaving pool occupancy exactly where plain decode
+would have it (no leaked pages).
+
+Three layers of coverage:
+
+* unit: ``BlockTables.truncate_to`` (the rollback primitive);
+* scheduler-level hypothesis: random draft agreement x draft_k x page
+  sizes drive ``plan_step(draft_k) -> record -> rollback_speculation``
+  with no model in the loop, pinning the exact-occupancy invariant;
+* engine-level: stream parity across drafts (shallow prefix, full-depth
+  self-agreeing, low-bit, and -- in the @slow hypothesis sweep -- a
+  noise-corrupted draft with *random* agreement patterns), sliding
+  windows, int8 KV, packed weights, sampled requests.
+"""
+import dataclasses as dc
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.models import LM
+from repro.serve import (PageAllocator, Request, Scheduler, ServeEngine,
+                         pages_needed)
+from repro.serve import paged_kv
+
+KEY = jax.random.PRNGKey(0)
+MIXED = [(3, 5), (7, 4), (5, 6), (9, 3), (2, 5), (6, 4)]
+
+
+def _requests(vocab, shapes, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, size=s).astype(np.int32), n)
+            for s, n in shapes]
+
+
+def _engine(arch_id, **kw):
+    cfg = ARCHS[arch_id].smoke
+    model = LM(cfg)
+    params = model.init(KEY)
+    return cfg, ServeEngine(model, params, **kw)
+
+
+def _assert_spec_matches_generate(eng, reqs, **run_kw):
+    res = eng.run(reqs, speculative=True, **run_kw)
+    for i, ((toks, n_new), out) in enumerate(zip(reqs, res["outputs"])):
+        ref = eng.generate(toks[None], n_new)["tokens"][0]
+        np.testing.assert_array_equal(out, ref, err_msg=f"request {i}")
+    return res
+
+
+# --------------------------------------------------- rollback primitive
+def test_block_tables_truncate_to_frees_tail_only():
+    bt = paged_kv.BlockTables(2, 5)
+    bt.append(0, [5, 7, 3, 9])
+    assert bt.truncate_to(0, 2) == [3, 9]
+    assert bt.as_array()[0].tolist() == [5, 7, 0, 0, 0]
+    assert bt.n_blocks(0) == 2 and bt.n_live(0) == 2
+    assert bt.truncate_to(0, 2) == []              # idempotent
+    bt.append(0, [4])                              # growth continues
+    assert bt.as_array()[0].tolist() == [5, 7, 4, 0, 0]
+    assert bt.release(0) == [5, 7, 4]
+    with pytest.raises(ValueError):
+        bt.truncate_to(0, -1)
+
+
+def test_truncate_to_keeps_reclaimed_placeholders_in_prefix():
+    """Out-of-window holes (free_prefix) and speculative tail rollback
+    compose: truncation only touches the tail, placeholders stay put so
+    logical block indices never shift."""
+    bt = paged_kv.BlockTables(1, 6)
+    bt.append(0, [5, 7, 3, 9, 2])
+    assert bt.free_prefix(0, 2) == [5, 7]          # window reclamation
+    assert bt.truncate_to(0, 4) == [2]             # spec rollback
+    assert bt.as_array()[0].tolist() == [0, 0, 3, 9, 0, 0]
+    assert bt.n_blocks(0) == 4 and bt.n_live(0) == 2
+    assert bt.release(0) == [3, 9]
+
+
+# -------------------------------------- scheduler accept/rollback property
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), page_size=st.integers(1, 5),
+       draft_k=st.integers(1, 5), prompt_len=st.integers(1, 11),
+       n_new=st.integers(2, 12))
+def test_plan_rollback_restores_plain_decode_occupancy(
+        seed, page_size, draft_k, prompt_len, n_new):
+    """Random draft agreement x k x page boundaries, no model in the loop:
+    after every verify step's record + rollback, the lane holds *exactly*
+    ``pages_needed(pos)`` pages -- the plain-decode state -- and the run
+    ends with every page back on the free list."""
+    rng = np.random.default_rng(seed)
+    total = pages_needed(prompt_len + n_new - 1, page_size)
+    alloc = PageAllocator(total + 3)               # headroom never binds
+    n_alloc = alloc.n_free
+    sched = Scheduler(1, page_size, total, alloc)
+    sched.submit(Request(0, np.zeros(prompt_len, np.int32), n_new=n_new))
+    assert sched.try_admit_chunked(prompt_len) is not None
+    plan = sched.plan_step(prompt_len, prompt_len + 1)  # whole prompt
+    assert plan["sample"] == [0] and plan["spec"] == {}
+    sched.record_first(0, 1)
+    while sched.has_work:
+        plan = sched.plan_step(1, draft_k + 1, draft_k=draft_k)
+        s = sched.slot(0)
+        pos0 = s.pos
+        cols = plan["spec"][0]
+        remaining = n_new - len(s.out)
+        assert 1 <= cols <= min(draft_k + 1, remaining)
+        # positions pos0..pos0+cols-1 are planned and page-backed
+        assert plan["positions"][0, :cols].tolist() == \
+            list(range(pos0, pos0 + cols))
+        assert sched.tables.n_live(0) == pages_needed(pos0 + cols, page_size)
+        # random agreement: accept a of the cols-1 drafts, emit a+1 tokens
+        a = int(rng.integers(0, cols))
+        done = False
+        for _ in range(a + 1):
+            done = sched.record(0, 7)
+        if done:
+            break
+        sched.rollback_speculation(0)
+        # the no-leak invariant: exactly the plain-decode page set remains
+        assert sched.tables.n_live(0) == pages_needed(s.pos, page_size)
+        assert alloc.n_free == n_alloc - sched.tables.n_live(0)
+    assert alloc.n_free == n_alloc                 # finished: all freed
+
+
+def test_plan_step_sheds_draft_tail_for_mandatory_decode_token():
+    """A lane's optional draft-span pages must never starve another lane's
+    mandatory feedback token: when the free list runs dry mid-plan and no
+    prefilling slot is left to preempt, the widest span's freshly granted
+    draft-tail page is shed (speculation degrades; plain decode never
+    fails where it would have succeeded without speculation)."""
+    # page_size=2, 4 usable pages.  Two prompt-2 / n_new-6 requests: one
+    # admission block each (free: 2), then both decode from pos 2.
+    sched = Scheduler(2, 2, 4, PageAllocator(5))
+    for rid in (0, 1):
+        sched.submit(Request(rid, np.zeros(2, np.int32), n_new=6))
+        assert sched.try_admit_chunked(2) is not None
+    plan = sched.plan_step(2, 8)                   # both whole prompts
+    assert sorted(plan["sample"]) == [0, 1]
+    sched.record_first(0, 1)
+    sched.record_first(1, 1)
+    # draft_k=3: lane0 plans span 4 (pos 2..5 -> blocks 1+2, both fresh,
+    # free list now empty); lane1's mandatory pos-2 block then sheds
+    # lane0's block-2 tail page -- lane0 degrades to 2 columns, lane1
+    # gets its block and degrades at its own block-2 boundary
+    plan = sched.plan_step(1, 8, draft_k=3)
+    assert plan["spec"] == {0: 2, 1: 2}
+    assert plan["requeued"] == []                  # nobody was preempted
+    assert sched.allocator.n_free == 0
+    for i, cols in plan["spec"].items():
+        s = sched.slot(i)
+        assert s.pos == 2 and cols == 2
+        # every planned column is page-backed, none beyond
+        assert sched.tables.n_live(i) == pages_needed(s.pos + cols, 2)
+        np.testing.assert_array_equal(plan["positions"][i, :cols], [2, 3])
+        assert (plan["positions"][i, cols:] == paged_kv.POS_SENTINEL).all()
+        np.testing.assert_array_equal(plan["logit_cols"][i], [0, 1, 1, 1])
+    # the shed page is NOT in the scrub set (it is back on the free list)
+    assert len(plan["fresh"]) == 2 and len(set(plan["fresh"])) == 2
+
+
+# ------------------------------------------------------- engine parity
+def test_spec_run_matches_generate_and_bounded_traces():
+    """Greedy speculative run() == independent generate() per request, the
+    full-depth self-draft pins the acceptance ceiling, and jit variants
+    stay bounded (2 model_step + 2 draft_step per run, no batch-1
+    prefill)."""
+    cfg, eng = _engine("internlm2-20b", max_len=32, attn_impl="ref")
+    reqs = _requests(cfg.vocab, MIXED)
+    res = eng.run(reqs, page_size=4, max_slots=3, speculative=True,
+                  draft_k=3)
+    counts = dict(eng.trace_counts)     # before the generate() refs below
+    st_ = res["stats"]
+    assert st_.mode == "chunked"
+    assert st_.spec_steps > 0 and st_.draft_proposed > 0
+    assert st_.tokens_out == sum(n for _, n in MIXED)
+    assert counts["model_step"] <= 2    # verify/mixed width + pure decode
+    assert counts["draft_step"] <= 2    # mirror width + (R, 1) proposals
+    assert counts.get("prefill", 0) == 0
+    for (toks, n_new), out in zip(reqs, res["outputs"]):
+        np.testing.assert_array_equal(
+            out, eng.generate(toks[None], n_new)["tokens"][0])
+
+    # draft == target: every draft accepted, tokens/lane-step caps at k+1
+    eng.trace_counts.clear()
+    res = _assert_spec_matches_generate(
+        eng, reqs, page_size=4, max_slots=3, draft_k=3,
+        draft_layers=cfg.n_repeat)
+    st_ = res["stats"]
+    assert st_.acceptance_rate == 1.0
+    assert 1.0 < st_.spec_tokens_per_step <= 4.0
+    assert eng.trace_counts["draft_step"] <= 2
+
+
+@pytest.mark.slow
+def test_spec_accounting_excludes_rejected_drafts():
+    """Rejected draft tokens exist only in draft_proposed/draft_accepted:
+    tokens_out, TTFT and the decode rate see emitted tokens alone, and the
+    per-request histogram sums to the lane's verify steps."""
+    cfg, eng = _engine("internlm2-20b", max_len=32, attn_impl="ref")
+    reqs = _requests(cfg.vocab, MIXED[:4], seed=9)
+    res = eng.run(reqs, page_size=4, max_slots=4, speculative=True,
+                  draft_k=2)                      # shallow draft: rejections
+    st_ = res["stats"]
+    assert st_.tokens_out == sum(n for _, n in MIXED[:4])
+    assert st_.draft_accepted <= st_.draft_proposed
+    assert st_.spec_tokens_out == st_.draft_accepted + st_.spec_lane_steps
+    assert sorted(st_.ttft_steps) == [0, 1, 2, 3]
+    assert all(v >= 1 for v in st_.ttft_steps.values())
+    # histogram: one entry per lane-step, accepted counts within [0, k]
+    assert sum(n for h in st_.accepted_hist.values()
+               for n in h.values()) == st_.spec_lane_steps
+    assert all(0 <= a <= 2 for h in st_.accepted_hist.values() for a in h)
+
+
+def test_spec_rejects_hybrid_pattern_with_monolithic_hint():
+    """Satellite fix: recurrent/memory caches cannot run the multi-token
+    verify chunk -- speculative=True on a hybrid pattern fails fast with
+    an error naming the monolithic fallback, before any model call."""
+    cfg, eng = _engine("jamba-1.5-large-398b", max_len=16)
+    reqs = _requests(cfg.vocab, [(3, 2)], seed=1)
+    with pytest.raises(ValueError, match="monolithic"):
+        eng.run(reqs, page_size=4, max_slots=1, speculative=True)
+    # and the guard fires for the forced-monolithic combination too
+    cfg2, eng2 = _engine("internlm2-20b", max_len=16)
+    with pytest.raises(ValueError, match="chunked"):
+        eng2.run(_requests(cfg2.vocab, [(3, 2)]), page_size=4, max_slots=1,
+                 prefill="monolithic", speculative=True)
+
+
+def test_spec_argument_validation():
+    cfg, eng = _engine("internlm2-20b", max_len=16)
+    reqs = _requests(cfg.vocab, [(3, 2)])
+    with pytest.raises(ValueError, match="draft_k"):
+        eng.run(reqs, speculative=True, draft_k=0)
+    with pytest.raises(ValueError, match="draft_policy"):
+        eng.run(reqs, speculative=True, draft_policy="oracle")
+    with pytest.raises(ValueError, match="draft_layers"):
+        eng.run(reqs, speculative=True, draft_policy="lowbit",
+                draft_layers=1)
+    with pytest.raises(ValueError, match="draft_layers"):
+        eng.run(reqs, speculative=True, draft_layers=99)
+    # knob/policy symmetry: each draft knob is rejected with the other
+    # policy instead of being silently ignored
+    with pytest.raises(ValueError, match="draft_act_bits"):
+        eng.run(reqs, speculative=True, draft_policy="prefix",
+                draft_act_bits=2.0)
+
+
+@pytest.mark.slow
+def test_draft_cache_stays_warm_through_degraded_steps(monkeypatch):
+    """Regression: steps where page pressure degrades *every* span to
+    width 1 (and no chunks run) must still feed decode feedback tokens
+    through the draft -- skipping the pass would leave draft-cache holes
+    the 1-token catch-up can never repair, permanently cratering
+    acceptance.  Simulate the squeeze at the plan level: a self-agreeing
+    draft must keep acceptance at 1.0 across it."""
+    from repro.serve.scheduler import Scheduler
+    cfg, eng = _engine("internlm2-20b", max_len=64, attn_impl="ref")
+    orig = Scheduler.plan_step
+    state = {"step": 0}
+
+    def squeezed(self, chunk, budget, draft_k=0):
+        plan = orig(self, chunk, budget, draft_k=draft_k)
+        state["step"] += 1
+        if draft_k and 3 <= state["step"] <= 5:
+            for i, cols in list(plan["spec"].items()):
+                if cols > 1:      # degrade the span, keep the pages (the
+                    plan["spec"][i] = 1        # lane grows into them)
+                    plan["positions"][i, 1:] = paged_kv.POS_SENTINEL
+                    plan["logit_cols"][i] = 0
+        return plan
+
+    monkeypatch.setattr(Scheduler, "plan_step", squeezed)
+    reqs = _requests(cfg.vocab, [(4, 24)], seed=3)
+    res = _assert_spec_matches_generate(eng, reqs, page_size=4, max_slots=1,
+                                        draft_k=3,
+                                        draft_layers=cfg.n_repeat)
+    st_ = res["stats"]
+    assert st_.acceptance_rate == 1.0, dict(st_.accepted_hist)
+
+
+# ----------------------------------------------- engine parity, @slow
+@pytest.mark.slow
+def test_spec_matches_generate_window_int8_lowbit_pallas():
+    """The hardest parity cell: sliding-window arch, int8 KV pages, the
+    low-bit AutoQ-native draft, Pallas kernels -- verify spans cross page
+    and window boundaries and the stream still bit-matches the oracle."""
+    cfg, eng = _engine("gemma2-2b", max_len=32, kv_bits=8)  # attn=pallas
+    reqs = _requests(cfg.vocab, MIXED[:4], seed=21)
+    res = _assert_spec_matches_generate(eng, reqs, page_size=4, max_slots=3,
+                                        draft_k=3, draft_policy="lowbit")
+    assert res["stats"].spec_steps > 0
+
+
+@pytest.mark.slow
+def test_spec_sampled_streams_match_plain_run():
+    """temperature > 0: each emitted token is sampled with the same rng
+    split + logits plain decode would use (rejected columns consume no
+    rng), so even sampled streams are bit-identical to the
+    non-speculative run."""
+    cfg, eng = _engine("internlm2-20b", max_len=32, attn_impl="ref")
+    rng = np.random.default_rng(2)
+    reqs = [{"tokens": rng.integers(0, cfg.vocab, size=s).astype(np.int32),
+             "n_new": n, "temperature": t, "seed": 40 + i}
+            for i, (s, n, t) in enumerate(
+                [(3, 6, 0.8), (9, 4, 0.0), (5, 5, 1.2), (2, 6, 0.5)])]
+    plain = eng.run(reqs, page_size=4, max_slots=4)
+    spec = eng.run(reqs, page_size=4, max_slots=4, speculative=True,
+                   draft_k=3, draft_layers=cfg.n_repeat)
+    for i, (a, b) in enumerate(zip(plain["outputs"], spec["outputs"])):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+
+
+@pytest.mark.slow
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), draft_k=st.integers(1, 4),
+       flip=st.sampled_from([0.0, 0.3, 0.7, 1.0]),
+       arch=st.sampled_from(["internlm2-20b", "gemma2-2b"]))
+def test_spec_parity_under_random_draft_agreement(seed, draft_k, flip, arch):
+    """Random draft agreement patterns at the engine level: a full-depth
+    (perfectly agreeing) draft corrupted token-wise with probability
+    ``flip`` yields arbitrary accept/reject prefixes, and the emitted
+    stream still bit-equals the oracle while the pool drains clean."""
+    cfg, eng = _engine(arch, max_len=32, attn_impl="ref")
+    rng = np.random.default_rng(seed)
+    orig = eng._draft_propose
+
+    def noisy(spec, plan, sched, spec_lanes, w1):
+        drafts = orig(spec, plan, sched, spec_lanes, w1)
+        for d in drafts.values():
+            mask = rng.random(d.shape) < flip
+            d[mask] = rng.integers(0, cfg.vocab, int(mask.sum()),
+                                   dtype=np.int32)
+        return drafts
+
+    eng._draft_propose = noisy
+    reqs = _requests(cfg.vocab, MIXED[:4], seed=seed % 1000)
+    res = _assert_spec_matches_generate(eng, reqs, page_size=4, max_slots=2,
+                                        draft_k=draft_k,
+                                        draft_layers=cfg.n_repeat)
+    st_ = res["stats"]
+    if flip == 0.0:
+        assert st_.acceptance_rate == 1.0
+    assert st_.tokens_out == sum(n for _, n in MIXED[:4])
+
+
+# --------------------------------------- all-local window + speculation
+@pytest.mark.slow
+def test_spec_with_out_of_window_reclamation():
+    """Speculative spans and O(window) page reclamation compose: a long
+    all-local generation speculates, rolls back, reclaims, and still
+    reproduces the oracle in a pool far smaller than its history."""
+    base = ARCHS["gemma2-2b"].smoke
+    cfg = dc.replace(base, pattern=(base.pattern[0], base.pattern[0]),
+                     window=8)
+    model = LM(cfg)
+    params = model.init(KEY)
+    eng = ServeEngine(model, params, max_len=64, attn_impl="ref")
+    toks = _requests(cfg.vocab, [(4, 40)], seed=31)[0][0]
+    ref = eng.generate(toks[None], 40)["tokens"][0]
+    res = eng.run([(toks, 40)], page_size=4, max_slots=1, num_pages=9,
+                  speculative=True, draft_k=3, draft_layers=cfg.n_repeat)
+    np.testing.assert_array_equal(res["outputs"][0], ref)
+    st_ = res["stats"]
+    assert st_.reclaimed_pages > 0
+    assert st_.spec_tokens_per_step > 1.0
+    # in-window blocks + speculation lookahead stay O(window + draft_k)
+    assert st_.peak_pages <= 5
