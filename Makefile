@@ -4,7 +4,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-all bench-packed bench-cb bench-attn docs-check
+.PHONY: test test-all bench-packed bench-cb bench-attn bench-open-loop \
+	docs-check
 
 test:
 	timeout 600 $(PY) -m pytest -x -q -m "not slow"
@@ -20,6 +21,10 @@ bench-cb:
 
 bench-attn:
 	$(PY) benchmarks/attention.py
+
+# Poisson open-loop serving (parameters from benchmarks/manifest.json)
+bench-open-loop:
+	$(PY) benchmarks/open_loop.py --experiment open_loop_sweep
 
 # every docs/ page must be reachable from docs/index.md (CI runs this too)
 docs-check:

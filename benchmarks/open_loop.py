@@ -1,0 +1,258 @@
+"""Open-loop serving benchmark: Poisson arrivals through ``serve()``.
+
+The closed-loop benches (continuous_batching.py) measure the engine with
+every request present at t=0 -- the batch regime.  This bench measures
+the *serving* regime the open-loop split exists for: requests arrive by
+a Poisson process while the step loop runs, so queueing, admission and
+the pipelined dispatch all matter.
+
+Three sections:
+
+* **closed-loop baselines** -- the same workload all-at-once through
+  ``run(overlap=False)`` (synchronous stepping: the pre-split loop's
+  schedule) and ``run(overlap=True)`` (pipelined dispatch), recording
+  both decode rates side by side.  Gate: the overlapped rate holds the
+  synchronous rate (x ``overlap_floor``, slack for CI timing noise --
+  both paths sample on device, the pipeline saves the per-step blocking
+  token sync).
+* **offered-load sweep** -- arrival rates derived from the *measured*
+  closed-loop capacity (``load_factor`` x capacity in requests/s),
+  inter-arrival gaps drawn i.i.d. exponential.  Per load: goodput
+  (completed tokens / makespan), queue-wait P50/P99, TTFT P50/P99
+  (arrival-relative), e2e P99, inter-token-latency P99, sheds.
+* **SLO mode** (``queue_slo_factor``) -- the same sweep with a
+  queue-wait deadline (factor x the per-request ideal service time):
+  overload sheds queued requests instead of serving dead-on-arrival
+  first tokens; survivors keep parity.
+
+Gates (asserted):
+
+* every non-shed stream at every offered load is bit-identical to its
+  independent serial ``generate`` oracle -- arrival pattern is invisible
+  to the numerics;
+* overlapped closed-loop decode tok/s >= ``overlap_floor`` x the
+  synchronous closed-loop rate (both always printed);
+* jit variants stay bounded across *all* runs together: <= 2
+  ``model_step`` shapes, <= 2 ``sample_step`` shapes, batch-1 prefill
+  never traced -- open-loop arrival patterns compile nothing new.
+
+Parameters come from benchmarks/manifest.json (``--experiment NAME``;
+``--smoke`` is shorthand for ``--experiment open_loop_smoke``), so
+sweeps are versioned data; CLI flags override.  Timing uses the jnp
+``ref`` attention backend by default, as in continuous_batching.py
+(off-TPU the Pallas kernels run in interpret mode, whose overhead would
+distort the engine-level comparison).
+
+Usage:  PYTHONPATH=src python benchmarks/open_loop.py
+            [--smoke | --experiment NAME] [--requests N] [--n-new N]
+            [--load-factors F ...] [--attn-impl ref|pallas] [--seed S]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.models import LM
+from repro.serve import FrontEnd, ServeEngine
+
+MANIFEST = pathlib.Path(__file__).parent / "manifest.json"
+
+
+def _manifest_params(name: str) -> dict:
+    entries = json.loads(MANIFEST.read_text())["experiments"]
+    by_name = {e["name"]: e for e in entries}
+    if name not in by_name:
+        raise SystemExit(f"unknown experiment {name!r}; manifest has "
+                         f"{sorted(by_name)}")
+    return dict(by_name[name].get("params", {}))
+
+
+def _workload(n_requests: int, n_new: int, vocab: int, max_len: int,
+              seed: int = 0):
+    """Mixed prompt lengths (distinct, page-ragged), fixed decode length."""
+    rng = np.random.default_rng(seed)
+    cap = max_len - n_new
+    lens = [1 + (3 + 5 * i) % cap for i in range(n_requests)]
+    return [(rng.integers(0, vocab, size=int(s)).astype(np.int32), n_new)
+            for s in lens]
+
+
+def _pct(d: dict, q: int) -> float:
+    return d.get(q, float("nan"))
+
+
+def _fmt_ms(x: float) -> str:
+    return f"{x * 1e3:7.1f}ms"
+
+
+def _open_loop_run(eng, reqs, offsets, *, page_size, max_slots,
+                   queue_slo_s=None):
+    """One serve() drain: submit the trace with absolute arrival times,
+    measure makespan from the first arrival to the loop returning."""
+    fe = FrontEnd(queue_slo_s=queue_slo_s)
+    t0 = fe.now() + 0.005            # first arrival strictly in the future
+    rids = [fe.submit(r, at=t0 + off).rid
+            for r, off in zip(reqs, offsets)]
+    res = eng.serve(fe, page_size=page_size, max_slots=max_slots)
+    makespan = fe.now() - t0
+    return rids, res, makespan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--experiment", default=None,
+                    help="manifest.json entry to load parameters from")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shorthand for --experiment open_loop_smoke (CI)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--n-new", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--max-len", type=int, default=None)
+    ap.add_argument("--page-size", type=int, default=None)
+    ap.add_argument("--max-slots", type=int, default=None)
+    ap.add_argument("--load-factors", type=float, nargs="*", default=None,
+                    help="offered load as a multiple of measured capacity")
+    ap.add_argument("--overlap-floor", type=float, default=None,
+                    help="gate: overlapped decode tok/s >= floor * sync "
+                         "(smoke defaults < 1.0: CI timing slack)")
+    ap.add_argument("--queue-slo-factor", type=float, default=None,
+                    help="queue SLO as a multiple of the ideal per-request "
+                         "service time (default: no shedding)")
+    ap.add_argument("--attn-impl", choices=("ref", "pallas"), default="ref")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    exp = args.experiment or ("open_loop_smoke" if args.smoke else None)
+    params = _manifest_params(exp) if exp else {}
+    defaults = {"requests": 8, "n_new": 8, "d_model": 64, "max_len": 48,
+                "page_size": 4, "max_slots": 4, "load_factors": [0.5, 1.5],
+                "overlap_floor": 0.8, "queue_slo_factor": None}
+    for key, fallback in defaults.items():
+        if getattr(args, key) is None:
+            setattr(args, key, params.get(key, fallback))
+
+    cfg = dataclasses.replace(ARCHS["internlm2-20b"].smoke,
+                              d_model=args.d_model, d_ff=4 * args.d_model)
+    model = LM(cfg)
+    model_params = model.init(jax.random.PRNGKey(0))
+    reqs = _workload(args.requests, args.n_new, cfg.vocab, args.max_len,
+                     seed=args.seed)
+    print(f"workload: {args.requests} requests, prompts "
+          f"{[int(t.size) for t, _ in reqs]}, {args.n_new} new tokens "
+          f"each, d_model={cfg.d_model}, page_size={args.page_size}, "
+          f"max_slots={args.max_slots}")
+
+    # one engine throughout: the jit-variant gate then covers every run at
+    # once (closed-loop, every load, both overlap settings share variants)
+    eng = ServeEngine(model, model_params, max_len=args.max_len,
+                      attn_impl=args.attn_impl)
+    # warm both entry points so wall-clock sections measure compiled code
+    eng.generate(reqs[0][0][None], 2)
+    eng.run(reqs[:1], page_size=args.page_size, max_slots=args.max_slots)
+
+    # ---- serial oracle (parity reference + ideal service time) ----------
+    refs, ser_decode_s, ser_toks = [], 0.0, 0
+    for toks, n_new in reqs:
+        out = eng.generate(toks[None], n_new)
+        refs.append(out["tokens"][0])
+        ser_decode_s += out["stats"].decode_s
+        ser_toks += out["stats"].tokens_out
+
+    # the serial oracle traced generate's own prefill/decode jits (one per
+    # distinct prompt length -- the explosion serving must never share);
+    # every serving section below must add *no* traces beyond model_step +
+    # sample_step
+    oracle_counts = dict(eng.trace_counts)
+
+    # ---- closed-loop baselines: sync (pre-split schedule) vs overlapped -
+    base = {}
+    for label, overlap in (("sync", False), ("overlapped", True)):
+        t0 = time.monotonic()
+        res = eng.run(reqs, page_size=args.page_size,
+                      max_slots=args.max_slots, overlap=overlap)
+        wall = time.monotonic() - t0
+        st = res["stats"]
+        agg = st.tokens_out / wall if wall else 0.0
+        base[label] = (st, agg)
+        print(f"closed {label:10s}: decode {st.decode_tok_per_s:8.1f} "
+              f"tok/s, aggregate {agg:8.1f} tok/s ({st.steps} steps, "
+              f"overlapped={st.overlapped})")
+        for i, (ref, got) in enumerate(zip(refs, res["outputs"])):
+            np.testing.assert_array_equal(
+                got, ref, err_msg=f"closed-loop {label}: request {i} "
+                                  "diverged from generate")
+    sync_rate = base["sync"][0].decode_tok_per_s
+    ovl_rate = base["overlapped"][0].decode_tok_per_s
+    # capacity for the offered-load sweep: the sustained closed-loop rate
+    cap_req_s = base["overlapped"][1] / args.n_new
+
+    # ---- offered-load sweep ---------------------------------------------
+    ideal_s = args.n_new / max(sync_rate, 1e-9)     # per-request service
+    slo = (args.queue_slo_factor * ideal_s
+           if args.queue_slo_factor is not None else None)
+    if slo is not None:
+        print(f"queue SLO: {slo * 1e3:.1f}ms "
+              f"({args.queue_slo_factor}x ideal service time)")
+    rng = np.random.default_rng(args.seed + 1)
+    sweep = []
+    for factor in args.load_factors:
+        rate = factor * max(cap_req_s, 1e-9)
+        offsets = np.cumsum(rng.exponential(1.0 / rate, len(reqs)))
+        rids, res, makespan = _open_loop_run(
+            eng, reqs, offsets, page_size=args.page_size,
+            max_slots=args.max_slots, queue_slo_s=slo)
+        st = res["stats"]
+        shed = set(res["shed"])
+        good_toks = sum(len(res["outputs"][rid]) for rid in rids
+                        if rid not in shed)
+        goodput = good_toks / makespan if makespan else 0.0
+        qw, tt = st.queue_wait_percentiles(), st.ttft_percentiles()
+        e2, it = st.e2e_percentiles(), st.itl_percentiles()
+        sweep.append((factor, goodput, st))
+        print(f"load {factor:4.2f}x ({rate:6.2f} req/s): goodput "
+              f"{goodput:8.1f} tok/s, queue-wait P50/P99 "
+              f"{_fmt_ms(_pct(qw, 50))}/{_fmt_ms(_pct(qw, 99))}, TTFT "
+              f"P50/P99 {_fmt_ms(_pct(tt, 50))}/{_fmt_ms(_pct(tt, 99))}, "
+              f"e2e P99 {_fmt_ms(_pct(e2, 99))}, ITL P99 "
+              f"{_fmt_ms(_pct(it, 99))}, shed {st.n_shed}/{len(reqs)}")
+        # parity: arrival pattern is invisible to the numerics
+        for i, rid in enumerate(rids):
+            if rid in shed:
+                assert res["outputs"][rid].size == 0
+                continue
+            np.testing.assert_array_equal(
+                res["outputs"][rid], refs[i],
+                err_msg=f"load {factor}x: request {i} diverged from the "
+                        "serial generate oracle")
+        assert st.overlapped, "open-loop serving should pipeline by default"
+
+    # ---- gates ----------------------------------------------------------
+    counts = dict(eng.trace_counts)
+    print(f"jit traces (all sections, one engine): {counts}")
+    assert counts["model_step"] <= 2, (
+        "open-loop serving must keep the closed-loop variant bound: "
+        "mixed-step + pure-decode only", counts)
+    assert counts.get("sample_step", 0) <= 2, (
+        "the batched device sampler compiles at most two shapes", counts)
+    for name in ("prefill", "decode_step", "decode_step_paged"):
+        assert counts.get(name, 0) == oracle_counts.get(name, 0), (
+            f"serving must never trace {name} (generate-only path)",
+            counts, oracle_counts)
+    print(f"decode tok/s: overlapped {ovl_rate:.1f} vs sync {sync_rate:.1f} "
+          f"({ovl_rate / max(sync_rate, 1e-9):.2f}x, floor "
+          f"{args.overlap_floor})")
+    assert ovl_rate >= args.overlap_floor * sync_rate, (
+        "pipelined dispatch must hold the synchronous decode rate",
+        ovl_rate, sync_rate, args.overlap_floor)
+    print("OK: open-loop parity + jit-variant + overlap-rate gates passed")
+
+
+if __name__ == "__main__":
+    main()

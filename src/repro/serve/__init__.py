@@ -8,20 +8,30 @@ Layering (each module is importable on its own):
 * :mod:`repro.serve.scheduler` -- continuous-batching policy: chunked
   (first-chunk) and monolithic admission, the token-budget ``plan_step``,
   requeue-on-preemption, out-of-window page reclamation, page lifecycle.
-  Pure host-side bookkeeping.
-* :mod:`repro.serve.engine` -- :class:`ServeEngine`: quantized weight-store
-  deployment (fake-quant or bit-packed) + the two execution models,
-  ``generate`` (single dense batch, the oracle) and ``run`` (the unified
-  token-budget step loop over the paged pool; chunked prefill by default,
-  monolithic fallback for hybrid archs).  Attention runs on the Pallas
-  kernels by
-  default (``attn_impl="pallas"``, kernels/attention.py; ``"ref"`` is the
-  jnp-oracle escape hatch), KV pages optionally int8 (``kv_bits=8``), and
-  a policy's activation QBNs follow the model into prefill/decode.
-
+  Pure host-side bookkeeping; the step plan is one-step-stale tolerant,
+  so a pipelined engine can plan ahead of its own token syncs.
+* :mod:`repro.serve.frontend` -- :class:`FrontEnd`: the *open-loop*
+  request boundary -- timestamped arrivals (live or pre-scheduled),
+  per-token stream callbacks, SLO-aware queue shedding.  Injectable
+  clock; pure host bookkeeping.
+* :mod:`repro.serve.step_loop` -- :class:`StepLoop`: the serving
+  back-end -- the token-budget step loop with overlapped dispatch
+  (step t+1 planned and dispatched before step t's sampled tokens are
+  synced; decode feedback scattered in on device, so it stays exact)
+  and the batched on-device sampler.  Speculative decode rides the same
+  loop synchronously.
+* :mod:`repro.serve.engine` -- :class:`ServeEngine`: quantized
+  weight-store deployment (fake-quant or bit-packed) + the execution
+  models: ``generate`` (single dense batch, the oracle), ``serve`` (the
+  open-loop core: FrontEnd in, StepLoop underneath) and ``run`` (the
+  closed-loop compatibility client of ``serve``; monolithic fallback
+  for hybrid archs).  Attention runs on the Pallas kernels by default
+  (``attn_impl="pallas"``, kernels/attention.py; ``"ref"`` is the
+  jnp-oracle escape hatch), KV pages optionally int8 (``kv_bits=8``),
+  and a policy's activation QBNs follow the model into prefill/decode.
 * :mod:`repro.serve.stats` -- :class:`ServeStats`: the measurable
-  contract (throughput / TTFT / speculation accounting) both execution
-  models fill in.
+  contract (throughput / TTFT / open-loop latency / speculation
+  accounting) the execution models fill in.
 
 ``run(speculative=True)`` adds multi-token decode: a draft pass (shallow
 self-prefix or low-bit rerun of the same packed weights) proposes
@@ -34,9 +44,12 @@ See docs/serving.md, docs/attention.md and docs/speculative.md for the
 architecture walkthroughs.
 """
 from repro.serve.engine import ServeEngine
+from repro.serve.frontend import FrontEnd
 from repro.serve.paged_kv import PageAllocator, PagesExhausted, pages_needed
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.stats import ServeStats
+from repro.serve.step_loop import StepLoop
 
 __all__ = ["ServeEngine", "ServeStats", "Request", "Scheduler",
-           "PageAllocator", "PagesExhausted", "pages_needed"]
+           "FrontEnd", "StepLoop", "PageAllocator", "PagesExhausted",
+           "pages_needed"]

@@ -58,7 +58,6 @@ meshes).
 from __future__ import annotations
 
 import collections
-import dataclasses
 import functools
 import time
 from typing import Any, Dict, List, Optional, Sequence, Union
@@ -72,8 +71,10 @@ from repro.models.transformer import LM
 from repro.quant.apply import apply_policy_packed, apply_policy_to_params
 from repro.quant.policy import QuantPolicy
 from repro.serve import paged_kv
+from repro.serve.frontend import FrontEnd, as_request
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.stats import ServeStats          # re-export (home moved)
+from repro.serve.step_loop import StepLoop
 
 __all__ = ["ServeEngine", "ServeStats"]
 
@@ -153,6 +154,66 @@ class ServeEngine:
         self._draft_step = jax.jit(counted("draft_step", model.model_step),
                                    static_argnames=("attn_impl",))
 
+        def sample_span(logits, keys, temps):
+            """Batched on-device sampling: every lane's candidate token(s)
+            plus the rng key state per acceptance length, one device call.
+
+            logits (R, C, V); keys (R, 2) raw uint32; temps (R,).  Returns
+            ``toks`` (R, C) int32 and ``keys_seq`` (R, C+1, 2) where
+            ``keys_seq[r, m]`` is lane r's key after consuming *m* tokens
+            -- the caller gathers the state matching how many tokens each
+            lane actually emitted, so rejected speculative columns never
+            consume rng.  Bit-identical to the historical eager per-lane
+            path: greedy lanes argmax (key untouched), sampled lanes
+            split-then-categorical per emitted token, matching a
+            single-request generate(seed) stream split-for-split.
+            """
+            def lane(lg, key, temp):
+                safe = jnp.where(temp > 0, temp, jnp.float32(1.0))
+
+                def col(key, row):
+                    nk, k = jax.random.split(key)
+                    samp = jax.random.categorical(
+                        k, row.astype(jnp.float32) / safe, -1)
+                    tok = jnp.where(temp > 0, samp,
+                                    jnp.argmax(row, -1)).astype(jnp.int32)
+                    nxt = jnp.where(temp > 0, nk, key)
+                    return nxt, (tok, nxt)
+
+                _, (toks, ks) = jax.lax.scan(col, key, lg)
+                return toks, jnp.concatenate([key[None], ks], 0)
+
+            return jax.vmap(lane)(logits, keys, temps)
+
+        self._sample_span = jax.jit(counted("sample_step", sample_span))
+
+        def draft_tail(params, cache, tables, slot_map, tok0, pos0, spans,
+                       steps, act):
+            """Fused draft proposal tail: the autoregressive (R, 1) chain
+            ``d_2 .. d_k`` as one scanned jit instead of k-1 separate
+            dispatches.  ``spans`` masks each lane (a lane proposes while
+            its verify span still has columns: ``spans >= m + 2`` at tail
+            iteration m); masked lanes carry sentinel positions, so their
+            writes land in the trash page.  Returns the (k-1, R) proposal
+            stack and the advanced draft cache."""
+            zeros = jnp.zeros(tok0.shape, jnp.int32)
+
+            def body(carry, mm):
+                cache, tok = carry
+                active = spans >= mm + 2
+                pos = jnp.where(active, pos0 + mm, paged_kv.POS_SENTINEL)
+                logits, cache = model.model_step(
+                    params, tok[:, None], pos[:, None], slot_map, cache,
+                    tables, zeros, act, attn_impl=self.attn_impl)
+                prop = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                tok = jnp.where(active, prop, tok)
+                return (cache, tok), prop
+
+            (cache, _), props = jax.lax.scan(body, (cache, tok0), steps)
+            return props, cache
+
+        self._draft_tail = jax.jit(counted("draft_tail", draft_tail))
+
     def weight_hbm_bytes(self) -> Dict[str, int]:
         """Stored weight bytes by leaf kind.
 
@@ -222,8 +283,19 @@ class ServeEngine:
             token_budget: Optional[int] = None, speculative: bool = False,
             draft_k: int = 4, draft_policy: str = "prefix",
             draft_layers: Optional[int] = None,
-            draft_act_bits: Optional[float] = None) -> Dict[str, Any]:
+            draft_act_bits: Optional[float] = None,
+            overlap: bool = True) -> Dict[str, Any]:
         """Serve a workload of mixed-length requests with continuous batching.
+
+        Since the open-loop split (docs/serving.md), ``run()`` is a thin
+        *closed-loop client* of the open-loop core: it submits every
+        request to a :class:`~repro.serve.frontend.FrontEnd` up front
+        (all arriving "now") and drains :meth:`serve` -- the degenerate
+        arrival pattern.  ``overlap`` (chunked mode) selects the
+        pipelined back-end that dispatches step t+1 before syncing step
+        t's tokens; ``overlap=False`` forces synchronous stepping.  Both
+        produce bit-identical streams -- the parity suite runs the
+        matrix.
 
         requests: each a :class:`Request`, a ``{"tokens", "n_new",
         "temperature"?, "seed"?}`` dict, or a ``(tokens, n_new)`` tuple;
@@ -298,7 +370,7 @@ class ServeEngine:
         Returns ``{"outputs": [np.ndarray per request, submit order],
         "stats": ServeStats}`` (with per-request TTFT in ``stats``).
         """
-        reqs = [self._as_request(i, r) for i, r in enumerate(requests)]
+        reqs = [as_request(i, r) for i, r in enumerate(requests)]
         for r in reqs:
             if r.prompt_len + r.n_new > self.max_len:
                 raise ValueError(
@@ -329,18 +401,21 @@ class ServeEngine:
                     "speculative=True runs through the chunked model_step "
                     "loop; prefill='monolithic' cannot carry verify spans "
                     "-- drop speculative=True or use prefill='chunked'")
-            if draft_k < 1:
-                raise ValueError(f"draft_k must be >= 1, got {draft_k}")
-            if draft_policy not in ("prefix", "lowbit"):
-                raise ValueError(f"unknown draft_policy {draft_policy!r}; "
-                                 "expected 'prefix' or 'lowbit'")
-            if draft_layers is not None and draft_policy != "prefix":
-                raise ValueError("draft_layers applies to "
-                                 "draft_policy='prefix' only")
-            if draft_act_bits is not None and draft_policy != "lowbit":
-                raise ValueError("draft_act_bits applies to "
-                                 "draft_policy='lowbit' only (the prefix "
-                                 "draft serves the target's own act QBNs)")
+            self._validate_draft_args(draft_k, draft_policy, draft_layers,
+                                      draft_act_bits)
+        if prefill == "chunked":
+            fe = FrontEnd()
+            for r in reqs:
+                fe.submit(r)
+            res = self.serve(fe, page_size=page_size, max_slots=max_slots,
+                             num_pages=num_pages, chunk_tokens=chunk_tokens,
+                             token_budget=token_budget,
+                             speculative=speculative, draft_k=draft_k,
+                             draft_policy=draft_policy,
+                             draft_layers=draft_layers,
+                             draft_act_bits=draft_act_bits, overlap=overlap)
+            return {"outputs": [res["outputs"][r.rid] for r in reqs],
+                    "stats": res["stats"]}
         blocks_per_seq = paged_kv.pages_needed(self.max_len, page_size)
         if num_pages is None:
             num_pages = max_slots * blocks_per_seq + 1      # +1: trash page
@@ -352,180 +427,126 @@ class ServeEngine:
         for r in reqs:
             sched.submit(r)
         outputs: Dict[int, List[int]] = {r.rid: [] for r in reqs}
-        rngs: Dict[int, jax.Array] = {}
         stats = ServeStats(n_requests=len(reqs), mode=prefill)
-        # out-of-window reclamation is sound only when *every* block of the
-        # pattern attends through the same sliding window (a single global
-        # block needs the whole history; one block table serves all layers)
-        cfg = self.model.cfg
-        reclaim = cfg.window if (chunkable and cfg.window is not None and
-                                 all(b.kind == "local_attn"
-                                     for b in cfg.pattern)) else None
-        args = (reqs, sched, cache, kinds, outputs, rngs, stats, num_pages,
-                page_size, reclaim)
-        if prefill == "chunked":
-            chunk = chunk_tokens if chunk_tokens is not None else page_size
-            if token_budget is not None:
-                budget = token_budget
-            elif speculative:
-                # room for every lane's full verify span plus one chunk
-                budget = max_slots * (draft_k + 1) + chunk - 1
-            else:
-                budget = max_slots + chunk - 1
-            if chunk < 1:
-                raise ValueError(f"chunk_tokens must be >= 1, got {chunk}")
-            if budget < max_slots:
-                raise ValueError(
-                    f"token_budget={budget} < max_slots={max_slots}: every "
-                    "decode lane needs a token each step (decode is never "
-                    "deferred); raise the budget or shrink the batch")
-            spec = self._make_draft(
-                max_slots, num_pages, page_size, draft_k, draft_policy,
-                draft_layers, draft_act_bits) if speculative else None
-            self._run_chunked(*args, chunk=chunk, budget=budget, spec=spec)
-        else:
-            self._run_monolithic(*args)
+        self._run_monolithic(reqs, sched, cache, kinds, outputs, stats,
+                             num_pages, page_size,
+                             self._reclaim_window(kinds))
         return {"outputs": [np.asarray(outputs[r.rid], np.int32)
                             for r in reqs],
                 "stats": stats}
 
-    def _run_chunked(self, reqs, sched, cache, kinds, outputs, rngs, stats,
-                     num_pages, page_size, reclaim, *, chunk, budget,
-                     spec=None):
-        """The unified token-budget step loop (prefill == decode).
+    def serve(self, frontend: FrontEnd, *, page_size: int = 16,
+              max_slots: int = 8, num_pages: Optional[int] = None,
+              chunk_tokens: Optional[int] = None,
+              token_budget: Optional[int] = None, speculative: bool = False,
+              draft_k: int = 4, draft_policy: str = "prefix",
+              draft_layers: Optional[int] = None,
+              draft_act_bits: Optional[float] = None,
+              overlap: bool = True) -> Dict[str, Any]:
+        """Open-loop serving: drain a :class:`FrontEnd` of timestamped
+        arrivals through the overlapped step loop.
 
-        ``spec`` (from :meth:`_make_draft`) arms speculative multi-token
-        decode: each step runs the draft pass (:meth:`_draft_propose`),
-        one verify ``model_step`` over every lane's span, then the
-        accept/rollback bookkeeping.  ``spec=None`` is the plain loop.
+        The open-loop core of the serving split (docs/serving.md):
+        requests may arrive *while the loop runs* -- pre-scheduled with
+        ``frontend.submit(..., at=t)`` (the Poisson bench), or live from
+        another thread.  Each iteration pumps due arrivals into the
+        scheduler (shedding SLO-overdue waiters), admits what fits, and
+        runs one token-budget ``model_step``; with ``overlap=True``
+        (default, non-speculative) the host plans and dispatches step
+        t+1 before syncing step t's sampled tokens, so the device never
+        waits on host sampling (serve/step_loop.py documents the
+        pipeline and its exact-feedback invariant).  The loop returns
+        when every scheduled arrival has been served or shed -- a
+        closed-*loop* client like :meth:`run` simply submits everything
+        up front.
+
+        Chunked-only: the open-loop core requires all-paged cache kinds
+        (hybrid mamba / cross-attention patterns serve through
+        ``run(prefill="monolithic")``).  ``speculative=True`` rides the
+        same back-end synchronously (acceptance control flow needs token
+        values); the remaining knobs match :meth:`run`.
+
+        Returns ``{"outputs": {rid: np.ndarray}, "stats": ServeStats,
+        "shed": [rid, ...]}`` -- shed requests (reported in both
+        ``shed`` and ``stats.shed``) have empty output streams.
         """
-        t_run = time.time()
-        k = spec["k"] if spec else 0
-        W = max(chunk, k + 1) if spec else chunk
-        while sched.has_work:
-            if reclaim is not None:
-                stats.reclaimed_pages += len(
-                    sched.reclaim_out_of_window(reclaim))
-            # ---- admission: a request joins when its first chunk fits
-            fresh = []
-            while (adm := sched.try_admit_chunked(chunk)) is not None:
-                fresh += adm[2]
-            if not sched.running_slots():
-                raise paged_kv.PagesExhausted(
-                    "queued request cannot ever be admitted: pool of "
-                    f"{num_pages} pages (page_size={page_size}) is too "
-                    "small for its first chunk + decode headroom")
-            t0 = time.time()
-            plan = sched.plan_step(chunk, budget, draft_k=k)
-            stats.requeues += len(plan["requeued"])
-            # a request admitted above may have been preempted inside this
-            # very plan_step: its admission pages are back on the free list
-            # (possibly re-allocated -- then they are in plan["fresh"] under
-            # the new owner), so drop the stale aliases from the scrub set
-            drop = set(plan["freed"])
-            fresh = [p for p in fresh if p not in drop]
-            # scrub unconditionally: admission pages must be sentinel-clean
-            # before any later step writes chunks into them, even if this
-            # step is abandoned below.  The draft cache shares the block
-            # tables, so it scrubs the same pages.
-            cache = paged_kv.scrub_pages(cache, kinds, fresh + plan["fresh"])
-            if spec:
-                spec["cache"] = paged_kv.scrub_pages(
-                    spec["cache"], kinds, fresh + plan["fresh"])
-            if not plan["sample"] and not plan["chunked"]:
-                continue            # every planned slot was preempted
-            # pure-decode steps run the (R, 1) column slice -- a full-width
-            # step would burn masked lanes per slot once every prompt is
-            # in.  jit variants stay bounded per (max_slots, chunk, pool
-            # shape[, draft_k]): mixed/verify width + pure-decode width,
-            # still independent of prompt lengths.
-            spec_lanes = {i: c for i, c in plan["spec"].items() if c > 1}
-            w = W if (plan["chunked"] or spec_lanes) else 1
-            tokens = plan["tokens"]
-            if spec and (plan["chunked"] or plan["spec"]):
-                # draft pass: mirrors prompt chunks into the draft cache,
-                # feeds every decode lane's feedback token (even on steps
-                # where page pressure degraded all spans to width 1 --
-                # skipping those would leave draft-cache holes the 1-token
-                # catch-up can never repair, permanently hurting
-                # acceptance), and proposes each speculating lane's draft
-                # tokens, which fill the placeholder verify columns
-                drafts = self._draft_propose(spec, plan, sched, spec_lanes,
-                                             W if plan["chunked"] else 2)
-                for i, cols in spec_lanes.items():
-                    tokens[i, 1:cols] = drafts[i][:cols - 1]
-            logits, cache = self._model_step(
-                self.params, jnp.asarray(tokens[:, :w]),
-                jnp.asarray(plan["positions"][:, :w]),
-                jnp.asarray(plan["slot_map"]), cache,
-                jnp.asarray(sched.tables.as_array()),
-                jnp.asarray(plan["logit_cols"]),
-                self.act_bits, attn_impl=self.attn_impl)
-            rows = np.asarray(logits)             # (R, C, V); C=1 plain
-            stats.chunk_prefill_tokens += sum(plan["chunked"].values())
-            emitted_step = 0
-            for i in plan["sample"]:
-                s = sched.slot(i)
-                req = s.req
-                if not s.out:                     # the request's first token
-                    tok = self._next_token(req, rngs, rows[i, -1:])
-                    outputs[req.rid].append(tok)
-                    stats.tokens_out += 1
-                    emitted_step += 1
-                    stats.ttft_steps[req.rid] = stats.steps + 1
-                    stats.ttft_s[req.rid] = time.time() - t_run
-                    sched.record_first(i, tok)
-                    continue
-                # decode lane: walk the verify span, keeping the longest
-                # draft/sample agreement prefix + the corrected token.
-                # Every emitted token comes from the same logits row + rng
-                # split plain decode would produce (rejected columns never
-                # consume rng), so acceptance changes speed, never output.
-                cols = plan["spec"].get(i, 1)
-                emitted = []
-                for j in range(cols):
-                    tok = self._next_token(req, rngs, rows[i, j:j + 1])
-                    emitted.append(tok)
-                    if j + 1 >= cols or tokens[i, j + 1] != tok:
-                        break
-                if cols > 1:
-                    stats.record_acceptance(req.rid, cols - 1,
-                                            len(emitted) - 1)
-                done = False
-                for tok in emitted:
-                    outputs[req.rid].append(tok)
-                    stats.tokens_out += 1
-                    done = sched.record(i, tok)
-                emitted_step += len(emitted)
-                if done:
-                    if spec:                      # slot may be re-admitted
-                        spec["frontier"].pop(i, None)
-                elif cols > 1:
-                    # pages past the acceptance point backed only rejected
-                    # draft positions: return them now (finished lanes
-                    # released everything inside record()); the draft
-                    # write cursor clamps back too -- draft KV past the
-                    # acceptance point is rejected-token garbage the
-                    # stream overwrites in place
-                    sched.rollback_speculation(i)
-                    if spec:
-                        f = spec["frontier"]
-                        f[i] = min(f.get(i, s.pos), s.pos)
-            if spec_lanes:
-                stats.spec_steps += 1
-            dt = time.time() - t0
-            # chunk-carrying steps are prefill-side: their time AND their
-            # sampled tokens (first tokens plus any decode lanes riding the
-            # step) leave the decode rate, so decode_tok_per_s measures the
-            # steady-state decode batch -- comparable across modes
-            if plan["chunked"]:
-                stats.prefill_s += dt
-                stats.prefill_tokens += emitted_step
-            else:
-                stats.decode_s += dt
-            stats.steps += 1
-            stats.peak_pages = max(stats.peak_pages,
-                                   num_pages - 1 - sched.allocator.n_free)
+        kinds = self.model.cfg.cache_kinds()
+        if not all(kd == "paged" for kd in kinds):
+            raise ValueError(
+                f"open-loop serving needs all-paged cache kinds, got "
+                f"{kinds}: recurrent/memory blocks cannot chunk -- serve "
+                "hybrid patterns through run(prefill='monolithic')")
+        if speculative:
+            self._validate_draft_args(draft_k, draft_policy, draft_layers,
+                                      draft_act_bits)
+        chunk = chunk_tokens if chunk_tokens is not None else page_size
+        if token_budget is not None:
+            budget = token_budget
+        elif speculative:
+            # room for every lane's full verify span plus one chunk
+            budget = max_slots * (draft_k + 1) + chunk - 1
+        else:
+            budget = max_slots + chunk - 1
+        if chunk < 1:
+            raise ValueError(f"chunk_tokens must be >= 1, got {chunk}")
+        if budget < max_slots:
+            raise ValueError(
+                f"token_budget={budget} < max_slots={max_slots}: every "
+                "decode lane needs a token each step (decode is never "
+                "deferred); raise the budget or shrink the batch")
+        blocks_per_seq = paged_kv.pages_needed(self.max_len, page_size)
+        if num_pages is None:
+            num_pages = max_slots * blocks_per_seq + 1      # +1: trash page
+        cache = self.model.init_paged_cache(max_slots, num_pages, page_size,
+                                            dtype=self.cache_dtype,
+                                            kv_bits=self.kv_bits)
+        sched = Scheduler(max_slots, page_size,
+                          blocks_per_seq, paged_kv.PageAllocator(num_pages))
+        spec = self._make_draft(
+            max_slots, num_pages, page_size, draft_k, draft_policy,
+            draft_layers, draft_act_bits) if speculative else None
+        stats = ServeStats(mode="chunked",
+                           overlapped=bool(overlap) and not speculative)
+        loop = StepLoop(self, frontend, sched, cache, kinds, stats,
+                        num_pages=num_pages, page_size=page_size,
+                        chunk=chunk, budget=budget,
+                        reclaim=self._reclaim_window(kinds), spec=spec,
+                        overlap=overlap)
+        loop.run()
+        stats.n_requests = frontend.n_submitted
+        stats.shed = list(frontend.shed)
+        outputs = {rid: np.asarray(toks, np.int32)
+                   for rid, toks in loop.outputs.items()}
+        for rid in frontend.shed:
+            outputs.setdefault(rid, np.zeros((0,), np.int32))
+        return {"outputs": outputs, "stats": stats,
+                "shed": list(frontend.shed)}
+
+    def _reclaim_window(self, kinds) -> Optional[int]:
+        # out-of-window reclamation is sound only when *every* block of the
+        # pattern attends through the same sliding window (a single global
+        # block needs the whole history; one block table serves all layers)
+        cfg = self.model.cfg
+        chunkable = all(kd == "paged" for kd in kinds)
+        return cfg.window if (chunkable and cfg.window is not None and
+                              all(b.kind == "local_attn"
+                                  for b in cfg.pattern)) else None
+
+    @staticmethod
+    def _validate_draft_args(draft_k, draft_policy, draft_layers,
+                             draft_act_bits) -> None:
+        if draft_k < 1:
+            raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+        if draft_policy not in ("prefix", "lowbit"):
+            raise ValueError(f"unknown draft_policy {draft_policy!r}; "
+                             "expected 'prefix' or 'lowbit'")
+        if draft_layers is not None and draft_policy != "prefix":
+            raise ValueError("draft_layers applies to "
+                             "draft_policy='prefix' only")
+        if draft_act_bits is not None and draft_policy != "lowbit":
+            raise ValueError("draft_act_bits applies to "
+                             "draft_policy='lowbit' only (the prefix "
+                             "draft serves the target's own act QBNs)")
 
     # ------------------------------------------------- speculative drafting
     def _make_draft(self, max_slots, num_pages, page_size, draft_k,
@@ -580,13 +601,18 @@ class ServeEngine:
         frontier clamps back, because everything past the acceptance
         point is rejected-token KV that the stream overwrites in place);
         and each speculating row's last-real-column logits propose its
-        first draft token.  Calls 2..span-1 are (R, 1) steps feeding each
-        lane's previous proposal at the next position -- exactly the
-        autoregressive loop the verify step collapses.  Draft proposals
-        are greedy by design: the draft is a guess, the verify sampler is
-        the ground truth.  ``w1`` is call 1's width (the chunk width, or
-        2 on chunkless steps -- feedback plus the catch-up column), so
-        the draft compiles two bounded shapes, like the main loop."""
+        first draft token.  The remaining proposals ``d_2 .. d_k`` are
+        one *fused* ``draft_tail`` jit -- a scanned (R, 1) chain feeding
+        each lane's previous proposal at the next position, exactly the
+        autoregressive loop the verify step collapses, without the k-1
+        per-call dispatch + transfer overhead the overlapped back-end
+        would otherwise stall on (lanes whose span ends early are
+        sentinel-masked; the whole proposal stack syncs as one
+        transfer).  Draft proposals are greedy by design: the draft is a
+        guess, the verify sampler is the ground truth.  ``w1`` is call
+        1's width (the chunk width, or 2 on chunkless steps -- feedback
+        plus the catch-up column), so the draft compiles two bounded
+        ``draft_step`` shapes plus a single ``draft_tail`` shape."""
         n = plan["tokens"].shape[0]
         tables = jnp.asarray(sched.tables.as_array())
         slot_map = jnp.asarray(plan["slot_map"])
@@ -611,36 +637,44 @@ class ServeEngine:
             spec["params"], jnp.asarray(dtok), jnp.asarray(dpos), slot_map,
             spec["cache"], tables, jnp.asarray(lcols), spec["act"],
             attn_impl=self.attn_impl)
-        prop = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-        drafts = {i: [prop[i]] for i in spec_lanes}
+        prop = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
         max_cols = max(spec_lanes.values(), default=1)
-        zeros = jnp.zeros((n,), jnp.int32)
-        for m in range(1, max_cols - 1):          # propose d_{m+1}
-            # width 2 (second column sentinel) so proposal calls share the
-            # chunkless call-1 variant: two draft shapes total
-            ctok = np.zeros((n, 2), np.int32)
-            cpos = np.full((n, 2), paged_kv.POS_SENTINEL, np.int32)
+        if max_cols > 2:
+            # fused tail: d_2..d_k for every lane in one scanned jit, one
+            # proposal-stack transfer.  Always k-1 iterations (static scan
+            # length keeps draft_tail at one compiled variant); lanes whose
+            # span ends early run sentinel-masked into the trash page.
+            spans = np.zeros((n,), np.int32)
+            pos0 = np.zeros((n,), np.int32)
             for i, cols in spec_lanes.items():
-                if cols >= m + 2:                 # lane still drafting
-                    ctok[i, 0] = drafts[i][m - 1]
-                    cpos[i, 0] = sched.slot(i).pos + m
-            logits, spec["cache"] = self._draft_step(
-                spec["params"], jnp.asarray(ctok), jnp.asarray(cpos),
-                slot_map, spec["cache"], tables, zeros, spec["act"],
-                attn_impl=self.attn_impl)
-            prop = np.asarray(jnp.argmax(logits[:, -1], -1), np.int32)
-            for i, cols in spec_lanes.items():
-                if cols >= m + 2:
-                    drafts[i].append(prop[i])
+                spans[i] = cols
+                pos0[i] = sched.slot(i).pos
+            props, spec["cache"] = self._draft_tail(
+                spec["params"], spec["cache"], tables, slot_map, prop,
+                jnp.asarray(pos0), jnp.asarray(spans),
+                jnp.arange(1, spec["k"], dtype=jnp.int32), spec["act"])
+            all_props = np.array(jnp.concatenate([prop[None], props], 0),
+                                 np.int32)
+        else:
+            all_props = np.array(prop, np.int32)[None]
+        # np.array (not asarray): callers own writable draft arrays
+        drafts = {i: all_props[:cols - 1, i]
+                  for i, cols in spec_lanes.items()}
         for i, cols in plan["spec"].items():      # draft write cursors
             frontier[i] = sched.slot(i).pos + max(cols - 1, 1)
-        return {i: np.asarray(d, np.int32) for i, d in drafts.items()}
+        return drafts
 
-    def _run_monolithic(self, reqs, sched, cache, kinds, outputs, rngs,
-                        stats, num_pages, page_size, reclaim):
+    def _run_monolithic(self, reqs, sched, cache, kinds, outputs, stats,
+                        num_pages, page_size, reclaim):
         """Legacy prefill-then-decode state machine (hybrid archs; TTFT
-        baseline for the chunked loop)."""
+        baseline for the chunked loop).  Sampling runs through the same
+        batched device sampler as the chunked back-end: one
+        ``sample_step`` call and one (R,)-token transfer per decode step
+        instead of a full logits pull plus per-lane host sampling."""
         t_run = time.time()
+        n = sched.n_slots
+        keys = jnp.zeros((n, 2), jnp.uint32)
+        temps = jnp.zeros((n,), jnp.float32)
         while sched.has_work:
             # ---- admission: prefill queued requests into free slots/pages
             admitted = 0
@@ -652,7 +686,13 @@ class ServeEngine:
                 cache = paged_kv.scrub_pages(cache, kinds, pages)
                 cache = paged_kv.write_prefill(cache, dense, kinds, slot,
                                                pages, page_size)
-                tok = self._next_token(req, rngs, np.asarray(logits[:, -1]))
+                keys = keys.at[slot].set(jax.random.PRNGKey(req.seed))
+                temps = temps.at[slot].set(jnp.float32(req.temperature))
+                toks, kseq = self._sample_span(logits[:, -1:],
+                                               keys[slot:slot + 1],
+                                               temps[slot:slot + 1])
+                keys = keys.at[slot].set(kseq[0, 1])
+                tok = int(np.asarray(toks)[0, 0])
                 stats.prefill_s += time.time() - t0
                 outputs[req.rid].append(tok)
                 stats.tokens_out += 1
@@ -687,10 +727,14 @@ class ServeEngine:
                 self.params, jnp.asarray(b["tokens"]), cache,
                 jnp.asarray(b["block_tables"]), jnp.asarray(b["pos"]),
                 self.act_bits, attn_impl=self.attn_impl)
-            rows = np.asarray(logits[:, -1])
+            toks, kseq = self._sample_span(logits[:, -1:], keys, temps)
+            m = np.zeros((n,), np.int32)
+            m[running] = 1                  # idle lanes never consume rng
+            keys = kseq[jnp.arange(n), jnp.asarray(m)]
+            vals = np.asarray(toks)         # one transfer for the batch
             for i in running:
                 req = sched.slot(i).req
-                tok = self._next_token(req, rngs, rows[i:i + 1])
+                tok = int(vals[i, 0])
                 outputs[req.rid].append(tok)
                 stats.tokens_out += 1
                 sched.record(i, tok)
@@ -698,17 +742,6 @@ class ServeEngine:
             stats.steps += 1
 
     # ---------------------------------------------------------- run helpers
-    @staticmethod
-    def _as_request(rid: int, r) -> Request:
-        if isinstance(r, Request):
-            return dataclasses.replace(r, rid=rid)
-        if isinstance(r, dict):
-            return Request(rid=rid, tokens=r["tokens"], n_new=r["n_new"],
-                           temperature=r.get("temperature", 0.0),
-                           seed=r.get("seed", 0))
-        tokens, n_new = r
-        return Request(rid=rid, tokens=tokens, n_new=n_new)
-
     def _prefill_one(self, req: Request, page_size: int):
         """Batch-1 prefill into a dense cache sized to whole pages.
 
@@ -722,19 +755,3 @@ class ServeEngine:
             self.params, {"tokens": jnp.asarray(req.tokens[None])}, dense,
             self.act_bits, attn_impl=self.attn_impl)
         return logits, dense
-
-    def _next_token(self, req: Request, rngs: Dict[int, jax.Array],
-                    logits_row: np.ndarray) -> int:
-        """Sample/argmax one token, per-request rng stream (matches a
-        single-request generate(seed=req.seed) split-for-split)."""
-        if req.temperature > 0:
-            rng = rngs.get(req.rid)
-            if rng is None:
-                rng = jax.random.PRNGKey(req.seed)
-            rng, k = jax.random.split(rng)
-            rngs[req.rid] = rng
-            tok = jax.random.categorical(
-                k, jnp.asarray(logits_row).astype(jnp.float32)
-                / req.temperature, -1)
-            return int(np.asarray(tok)[0])
-        return int(np.argmax(logits_row[0]))

@@ -132,6 +132,19 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self._queue.append(req)
 
+    def drop_queued(self, rid: int) -> bool:
+        """Remove a still-queued request (open-loop SLO shedding).
+
+        Only requests that never reached a slot can be dropped -- once
+        admitted a request owns pages and (possibly) emitted tokens, and
+        shedding it would tear a stream mid-flight.  Returns True iff the
+        request was found in the queue and removed."""
+        for r in self._queue:
+            if r.rid == rid:
+                self._queue.remove(r)
+                return True
+        return False
+
     def try_admit(self) -> Optional[Tuple[Request, int, List[int]]]:
         """Admit the queue head if a slot and enough pages are free.
 
@@ -239,6 +252,15 @@ class Scheduler:
             carries ``POS_SENTINEL`` positions.  Draft columns (1..span-1
             of a speculating row) are *placeholders* the engine fills
             after the draft pass -- the plan fixes their positions only.
+            A decode row's column 0 carries the *host view* of the lane's
+            last sampled token, which a pipelined engine may not have
+            synced yet (the overlapped step loop records a ``PENDING``
+            placeholder and substitutes the exact device-resident token
+            at dispatch).  The plan itself is **one-step-stale tolerant**
+            by construction: chunk planning, page growth, and preemption
+            depend only on token *counts* and positions, never on token
+            values, so a stale (or placeholder) feedback value changes
+            nothing but the bits the engine overrides anyway.
         ``"slot_map"`` : (n_slots,) int32 row -> scheduler slot (identity
             here; the contract allows compaction).
         ``"logit_cols"`` : (n_slots,) int32 -- each row's last real
@@ -248,6 +270,10 @@ class Scheduler:
         ``"sample"`` : slots emitting >= 1 token this step -- every decode
             lane, plus each prefilling slot whose chunk reaches its prompt
             end this step (its first token; TTFT).
+        ``"decode"`` : the decode-lane subset of ``"sample"`` (slots whose
+            column-0 token is *feedback*, i.e. exactly the rows whose
+            input an overlapped engine must source from the previous
+            step's device-resident sample).
         ``"spec"`` : slot -> planned verify-span width (1..draft_k+1) for
             decode lanes when ``draft_k > 0``, else ``{}``.  Width 1 means
             the lane degraded to plain decode (no draft pass for it).
@@ -389,7 +415,8 @@ class Scheduler:
             self._queue.appendleft(s.req)
         return {"tokens": tokens, "positions": positions,
                 "slot_map": np.arange(n, dtype=np.int32),
-                "logit_cols": logit_cols, "sample": sample, "spec": spec,
+                "logit_cols": logit_cols, "sample": sample,
+                "decode": decode_lanes, "spec": spec,
                 "chunked": chunked, "fresh": fresh, "freed": freed,
                 "requeued": [s.req.rid for s in preempted]}
 

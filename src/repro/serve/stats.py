@@ -9,7 +9,14 @@
 * **latency** -- per-request ``ttft_steps`` / ``ttft_s`` (1-based index of
   the model call whose logits produced the first token -- the same
   convention in chunked and monolithic modes, so step-based TTFT compares
-  across them) and ``ttft_percentiles()``;
+  across them) and ``ttft_percentiles()``; open-loop serving adds
+  ``queue_wait_s`` (arrival -> first admission), ``e2e_s`` (arrival ->
+  last token) and the aggregate inter-token gap list ``itl_s``, each with
+  a percentile view (``queue_wait_percentiles`` / ``e2e_percentiles`` /
+  ``itl_percentiles``).  All wall-clock latency is measured against the
+  front-end's clock and a request's *arrival* time -- for the closed-loop
+  ``run()`` every request arrives at loop start, so ``ttft_s`` keeps its
+  historical "seconds since run() began" meaning;
 * **speculation** -- per-request accepted-token histograms
   (``accepted_hist``), ``draft_proposed`` / ``draft_accepted`` (rejected
   draft tokens are counted here and *nowhere else*: they never touch
@@ -23,9 +30,18 @@ runs.  ``serve/engine.py`` re-exports it for backward compatibility.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, List
 
 import numpy as np
+
+
+def _percentiles(vals, qs) -> Dict[int, float]:
+    """Percentile dict over a value collection (empty dict when empty)."""
+    vals = sorted(vals)
+    if not vals:
+        return {}
+    arr = np.asarray(vals)
+    return {q: float(np.percentile(arr, q)) for q in qs}
 
 
 @dataclasses.dataclass
@@ -52,6 +68,16 @@ class ServeStats:
     # wall-clock seconds since run() started
     ttft_steps: Dict[int, int] = dataclasses.field(default_factory=dict)
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # ---- open-loop latency (arrival-relative; front-end clock) ----
+    # arrival -> first slot admission (a requeued prefill keeps its first
+    # admission stamp: queue wait measures time to first service)
+    queue_wait_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    e2e_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # aggregate inter-token gaps across requests (time between consecutive
+    # tokens *of the same stream* becoming host-visible)
+    itl_s: List[float] = dataclasses.field(default_factory=list)
+    shed: List[int] = dataclasses.field(default_factory=list)
+    overlapped: bool = False        # chunked: pipelined dispatch active
     requeues: int = 0               # chunked: prefills preempted + requeued
     reclaimed_pages: int = 0        # out-of-window pages returned mid-run
     peak_pages: int = 0             # high-water mark of pool pages in use
@@ -103,9 +129,24 @@ class ServeStats:
         hist = self.accepted_hist.setdefault(rid, {})
         hist[accepted] = hist.get(accepted, 0) + 1
 
+    @property
+    def n_shed(self) -> int:
+        """Requests dropped before first admission (open-loop SLO)."""
+        return len(self.shed)
+
     def ttft_percentiles(self, qs=(50, 99)) -> Dict[int, float]:
         """Percentiles of per-request TTFT seconds (empty dict if unset)."""
-        if not self.ttft_s:
-            return {}
-        vals = np.asarray(sorted(self.ttft_s.values()))
-        return {q: float(np.percentile(vals, q)) for q in qs}
+        return _percentiles(self.ttft_s.values(), qs)
+
+    def queue_wait_percentiles(self, qs=(50, 99)) -> Dict[int, float]:
+        """Percentiles of per-request queue wait (arrival -> admission)."""
+        return _percentiles(self.queue_wait_s.values(), qs)
+
+    def e2e_percentiles(self, qs=(50, 99)) -> Dict[int, float]:
+        """Percentiles of per-request end-to-end latency (arrival -> last
+        token host-visible)."""
+        return _percentiles(self.e2e_s.values(), qs)
+
+    def itl_percentiles(self, qs=(50, 99)) -> Dict[int, float]:
+        """Percentiles of the aggregate inter-token gap population."""
+        return _percentiles(self.itl_s, qs)

@@ -1,0 +1,277 @@
+"""Open-loop serving core: front-end arrivals + overlapped step loop.
+
+The acceptance contract of the serving split (docs/serving.md):
+
+* **compat bit-parity** -- ``run(overlap=True)`` (pipelined dispatch),
+  ``run(overlap=False)`` (synchronous reference) and independent
+  ``generate`` calls emit identical token streams, across weight
+  stores, KV dtypes, attention patterns and kernels;
+* **open loop is invisible to the numerics** -- a request arriving
+  *mid-run* (virtual clock) joins the running batch and still matches
+  its single-request oracle; all-at-once ``serve`` equals ``run``;
+* **SLO shedding** is reported, never silent: a dropped request shows
+  up in ``stats.shed`` with an empty stream, and survivors keep parity;
+* **streaming**: ``on_token`` callbacks fire in token order and carry
+  exactly the final output stream;
+* **jit-variant boundedness survives the split** -- arrival pattern
+  (staggered vs all-at-once) cannot change the ``model_step`` trace
+  count, and the batched device sampler adds at most two shapes.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import LM
+from repro.quant.policy import QuantPolicy
+from repro.serve import FrontEnd, Request, ServeEngine
+
+KEY = jax.random.PRNGKey(0)
+MIXED = [(3, 5), (7, 4), (5, 6), (9, 3), (2, 5), (6, 4)]
+
+
+def _requests(vocab, shapes, seed=3):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, vocab, size=s).astype(np.int32), n)
+            for s, n in shapes]
+
+
+def _engine(arch_id, **kw):
+    cfg = ARCHS[arch_id].smoke
+    model = LM(cfg)
+    params = model.init(KEY)
+    return cfg, ServeEngine(model, params, **kw)
+
+
+class TickClock:
+    """Deterministic virtual clock: every reading advances a small tick
+    (the loop makes a few readings per step, so steps take 'time'),
+    ``sleep`` jumps the full nap.  Arrival-dependent behaviour becomes
+    reproducible -- no wall-clock flake."""
+
+    def __init__(self, tick=1e-3):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+    def sleep(self, dt):
+        self.t += max(dt, self.tick)
+
+
+def _vclock_frontend(**kw):
+    clk = TickClock()
+    return FrontEnd(clock=clk, sleep=clk.sleep, **kw), clk
+
+
+# ----------------------------------------------------- front-end unit tests
+def test_frontend_pump_releases_in_arrival_order():
+    from repro.serve import PageAllocator, Scheduler
+    fe, clk = _vclock_frontend()
+    sched = Scheduler(2, 4, 4, PageAllocator(16))
+    toks = np.arange(3, dtype=np.int32)
+    fe.submit((toks, 2), at=5.0)
+    fe.submit((toks, 2), at=2.0)
+    now, released = fe.pump(sched)          # t ~ a few ticks: nothing due
+    assert released == [] and fe.n_scheduled == 2
+    clk.sleep(2.0)
+    _, released = fe.pump(sched)
+    assert [r.rid for r in released] == [1]  # the at=2.0 arrival only
+    clk.sleep(3.0)
+    _, released = fe.pump(sched)
+    assert [r.rid for r in released] == [0]
+    assert fe.n_scheduled == 0 and fe.n_submitted == 2
+
+
+def test_frontend_max_queue_rejects_at_submit():
+    fe, _ = _vclock_frontend(max_queue=1)
+    toks = np.arange(3, dtype=np.int32)
+    a = fe.submit((toks, 2))
+    b = fe.submit((toks, 2))                 # backlog full: shed immediately
+    assert fe.shed == [b.rid] and a.rid not in fe.shed
+    assert fe.n_scheduled == 1 and fe.n_submitted == 2
+
+
+# ------------------------------------------------- compat bit-parity matrix
+def _mixed_policy(model, seed=0):
+    graph = model.graph(seq_len=4, batch=2)
+    policy = QuantPolicy.uniform(graph, 4.0)
+    rng = np.random.default_rng(seed)
+    for l in graph.layers:
+        policy.weight_bits[l.name] = rng.choice(
+            [2, 3, 4, 4, 8], size=l.n_groups).astype(np.float32)
+    return graph, policy
+
+
+@pytest.mark.parametrize("cell", [
+    "dense_fp",
+    "window_int8_fake",
+    "ref_fp",
+    # packed matmuls run in Pallas interpret mode on CPU: correct but slow
+    pytest.param("window_int8_packed", marks=pytest.mark.slow),
+])
+def test_run_overlap_matrix_matches_sync_and_generate(cell):
+    """The pipelined back-end is bit-invisible: overlap on/off/oracle
+    agree across the compat matrix (weight store x KV dtype x attention
+    pattern x kernel impl), greedy and sampled lanes alike."""
+    if cell == "dense_fp":
+        cfg, eng = _engine("internlm2-20b", max_len=32)
+    elif cell == "ref_fp":
+        cfg, eng = _engine("internlm2-20b", max_len=32, attn_impl="ref")
+    else:
+        cfg = ARCHS["gemma2-2b"].smoke
+        model = LM(cfg)
+        params = model.init(KEY)
+        graph, policy = _mixed_policy(model)
+        store = "packed" if cell == "window_int8_packed" else "fake"
+        eng = ServeEngine(model, params, policy=policy, graph=graph,
+                          max_len=32, weight_store=store, kv_bits=8)
+    reqs = _requests(cfg.vocab, MIXED, seed=11)
+    reqs[1] = ({"tokens": reqs[1][0], "n_new": reqs[1][1],
+                "temperature": 0.8, "seed": 7})
+    on = eng.run(reqs, page_size=4, max_slots=4, overlap=True)
+    off = eng.run(reqs, page_size=4, max_slots=4, overlap=False)
+    assert on["stats"].overlapped and not off["stats"].overlapped
+    for i, (a, b) in enumerate(zip(on["outputs"], off["outputs"])):
+        np.testing.assert_array_equal(a, b, err_msg=f"request {i}")
+    for i, r in enumerate(reqs):
+        toks, n, t, s = ((r["tokens"], r["n_new"], r["temperature"],
+                          r["seed"]) if isinstance(r, dict)
+                         else (r[0], r[1], 0.0, 0))
+        ref = eng.generate(toks[None], n, temperature=t, seed=s)["tokens"][0]
+        np.testing.assert_array_equal(on["outputs"][i], ref,
+                                      err_msg=f"request {i} vs oracle")
+
+
+def test_serve_all_at_once_equals_run():
+    """run() is the degenerate open loop: pre-submitting every request to
+    a FrontEnd and draining serve() reproduces run() stream-for-stream."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    reqs = _requests(cfg.vocab, MIXED, seed=5)
+    ref = eng.run(reqs, page_size=4, max_slots=4)
+    fe = FrontEnd()
+    rids = [fe.submit(r).rid for r in reqs]
+    res = eng.serve(fe, page_size=4, max_slots=4)
+    assert res["shed"] == []
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(res["outputs"][rid],
+                                      ref["outputs"][i],
+                                      err_msg=f"request {i}")
+    assert res["stats"].n_requests == len(reqs)
+
+
+# ------------------------------------------------- open-loop arrival tests
+def test_mid_run_arrival_joins_batch_and_streams_in_order():
+    """A request arriving while the loop is decoding is admitted into the
+    running batch, matches its single-request oracle, and its stream
+    callbacks fire in token order interleaved with the earlier stream."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    fe, clk = _vclock_frontend()
+    rng = np.random.default_rng(9)
+    prompt_a = rng.integers(0, cfg.vocab, size=3).astype(np.int32)
+    prompt_b = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    events = []
+
+    def cb(rid, idx, tok):
+        events.append((rid, idx, tok))
+
+    a = fe.submit((prompt_a, 10), on_token=cb)
+    # ~4 clock ticks per step: t=0.01 lands mid-decode of request a
+    b = fe.submit((prompt_b, 4), at=0.01, on_token=cb)
+    res = eng.serve(fe, page_size=4, max_slots=4)
+    stats = res["stats"]
+    assert res["shed"] == [] and stats.n_shed == 0
+    for req, prompt, n in ((a, prompt_a, 10), (b, prompt_b, 4)):
+        ref = eng.generate(prompt[None], n)["tokens"][0]
+        np.testing.assert_array_equal(res["outputs"][req.rid], ref,
+                                      err_msg=f"rid {req.rid}")
+    # b really arrived mid-run: a's stream was still live at b's first token
+    b_events = [e for e in events if e[0] == b.rid]
+    a_events = [e for e in events if e[0] == a.rid]
+    assert events.index(a_events[-1]) > events.index(b_events[0])
+    # callbacks fire in token order and carry the final stream exactly
+    for req in (a, b):
+        mine = [e for e in events if e[0] == req.rid]
+        assert [idx for _, idx, _ in mine] == list(range(len(mine)))
+        np.testing.assert_array_equal([t for _, _, t in mine],
+                                      res["outputs"][req.rid])
+    # open-loop latency stats: arrival-relative, populated per request
+    for rid in (a.rid, b.rid):
+        assert stats.queue_wait_s[rid] >= 0.0
+        assert stats.ttft_s[rid] > 0.0
+        assert stats.e2e_s[rid] >= stats.ttft_s[rid]
+    assert b.rid in stats.queue_wait_s
+    assert len(stats.itl_s) == (10 - 1) + (4 - 1)
+    for pcts in (stats.queue_wait_percentiles(), stats.e2e_percentiles(),
+                 stats.itl_percentiles()):
+        assert set(pcts) == {50, 99}
+    assert stats.overlapped
+
+
+def test_queue_slo_sheds_waiter_and_reports_it():
+    """With one slot occupied for many steps, a queued request blows its
+    queue SLO: it is shed (reported in stats.shed + empty stream), the
+    running request never notices, and admitted requests are exempt."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    fe, clk = _vclock_frontend(queue_slo_s=0.004)
+    rng = np.random.default_rng(13)
+    prompt_a = rng.integers(0, cfg.vocab, size=5).astype(np.int32)
+    prompt_b = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    a = fe.submit((prompt_a, 12))
+    b = fe.submit((prompt_b, 4))
+    res = eng.serve(fe, page_size=4, max_slots=1)
+    assert res["shed"] == [b.rid]
+    assert res["stats"].shed == [b.rid] and res["stats"].n_shed == 1
+    assert res["outputs"][b.rid].size == 0
+    assert b.rid not in res["stats"].queue_wait_s
+    ref = eng.generate(prompt_a[None], 12)["tokens"][0]
+    np.testing.assert_array_equal(res["outputs"][a.rid], ref)
+    # a was admitted immediately: exempt from shedding despite long service
+    assert a.rid in res["stats"].e2e_s
+
+
+def test_serve_speculative_rides_open_loop():
+    """speculative=True runs through the same serve() back-end
+    (synchronously) with staggered arrivals, keeping the for-any-draft
+    parity contract."""
+    cfg, eng = _engine("internlm2-20b", max_len=32)
+    fe, clk = _vclock_frontend()
+    reqs = _requests(cfg.vocab, MIXED[:4], seed=17)
+    rids = [fe.submit(r, at=0.004 * i).rid for i, r in enumerate(reqs)]
+    res = eng.serve(fe, page_size=4, max_slots=4, speculative=True,
+                    draft_k=3)
+    assert not res["stats"].overlapped        # spec steps synchronously
+    assert res["stats"].draft_proposed > 0
+    for rid, (toks, n) in zip(rids, reqs):
+        ref = eng.generate(toks[None], n)["tokens"][0]
+        np.testing.assert_array_equal(res["outputs"][rid], ref,
+                                      err_msg=f"rid {rid}")
+
+
+# ------------------------------------------------------ jit-variant bounds
+def test_trace_counts_independent_of_arrival_pattern():
+    """Regression (extends the closed-loop trace-count gate): staggered
+    open-loop arrivals compile exactly the variants the all-at-once run
+    does -- 2 model_step shapes, <= 2 sampler shapes -- and the retired
+    per-lane host sampling path never reappears."""
+    cfg = ARCHS["internlm2-20b"].smoke
+    model = LM(cfg)
+    params = model.init(KEY)
+
+    def counts(stagger):
+        eng = ServeEngine(model, params, max_len=32)
+        fe, clk = _vclock_frontend()
+        reqs = _requests(cfg.vocab, MIXED, seed=23)
+        for i, r in enumerate(reqs):
+            fe.submit(r, at=(0.005 * i if stagger else 0.0))
+        eng.serve(fe, page_size=4, max_slots=4)
+        return dict(eng.trace_counts)
+
+    open_loop, closed = counts(True), counts(False)
+    assert open_loop["model_step"] == closed["model_step"]
+    assert open_loop["model_step"] <= 2
+    assert open_loop.get("sample_step", 0) <= 2
+    assert open_loop.get("prefill", 0) == 0
+    assert open_loop.get("decode_step_paged", 0) == 0
